@@ -1,0 +1,92 @@
+"""Shared DFL experiment runner for the per-figure benchmarks.
+
+Scale note (DESIGN.md §6): the paper's sweeps used 3500 GPU-hours; these
+benches reproduce each figure's *claim* at CPU scale (n ≤ 64, MLP on
+MNIST-like synthetic data, a few hundred rounds).  Every module prints
+``name,us_per_call,derived`` CSV rows via ``emit``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import topology as T
+from repro.core.initialisation import InitConfig, gain_from_graph
+from repro.data import mnist_like, node_batch_iterator, node_datasets
+from repro.fed import init_fl_state, make_eval_fn, make_round_fn, train_loop
+from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
+from repro.optim import adamw, sgd
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def run_dfl_mlp(
+    *,
+    n_nodes: int,
+    graph=None,
+    gain: float | None = None,
+    rounds: int = 60,
+    per_node: int = 128,
+    batch_size: int = 16,
+    b_local: int = 2,
+    hidden=(128, 64),
+    optimizer="sgd",
+    link_p: float = 1.0,
+    node_p: float = 1.0,
+    eval_every: int = 5,
+    seed: int = 0,
+    track_sigmas: bool = False,
+    aggregate: bool = True,
+    test_size: int = 512,
+):
+    """One DFL run of the paper's MLP config on MNIST-like data.
+
+    Returns (history, seconds_per_round).
+    """
+    graph = graph if graph is not None else T.complete(n_nodes)
+    gain = gain if gain is not None else gain_from_graph(graph)
+    ds = mnist_like(n_nodes * per_node + test_size, seed=seed)
+    parts = [np.arange(i * per_node, (i + 1) * per_node) for i in range(n_nodes)]
+    xs, ys = node_datasets(ds, parts)
+    test = (ds.x[-test_size:], ds.y[-test_size:])
+
+    loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
+    opt = sgd(1e-3, 0.5) if optimizer == "sgd" else adamw(1e-3)
+    eval_fn = make_eval_fn(loss_fn)
+    icfg = InitConfig("he_normal", gain)
+    init_one = lambda k: init_mlp(icfg, k, hidden=hidden)
+    state = init_fl_state(jax.random.PRNGKey(seed), n_nodes, init_one, opt)
+    rf = make_round_fn(loss_fn, opt, graph, link_p=link_p, node_p=node_p, aggregate=aggregate)
+
+    def batches():
+        it = node_batch_iterator(xs, ys, batch_size, seed=seed)
+        while True:
+            bs = [next(it) for _ in range(b_local)]
+            yield (
+                np.stack([b.x for b in bs], axis=1),
+                np.stack([b.y for b in bs], axis=1),
+            )
+
+    t0 = time.time()
+    state, hist = train_loop(
+        state, rf, batches(), n_rounds=rounds, eval_every=eval_every,
+        eval_fn=eval_fn, eval_batch=test, track_sigmas=track_sigmas,
+    )
+    sec_per_round = (time.time() - t0) / rounds
+    return hist, sec_per_round
+
+
+def rounds_to_loss(hist: dict, threshold: float) -> float:
+    """First recorded round where mean test loss drops below threshold."""
+    for r, l in zip(hist["round"], hist["test_loss"]):
+        if l < threshold:
+            return r
+    return float("inf")

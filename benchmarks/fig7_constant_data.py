@@ -1,0 +1,34 @@
+"""Figure 7: constant TOTAL data spread over more nodes — per-node
+computation to reach a given loss stays roughly constant (trajectory over
+wall-clock-equivalent is consistent, including the isolated single node).
+"""
+from __future__ import annotations
+
+from repro.core import topology as T
+
+from .common import emit, run_dfl_mlp
+
+
+def run(quick: bool = True) -> None:
+    total = 2048 if quick else 8192
+    rounds = 60 if quick else 200
+    base_final = None
+    for n in (1, 4, 16):
+        per = total // n
+        graph = T.complete(n) if n > 1 else None
+        if n == 1:
+            # isolated node: no aggregation (the centralised reference)
+            hist, spr = run_dfl_mlp(n_nodes=1, per_node=per, rounds=rounds, aggregate=False, gain=1.0)
+        else:
+            hist, spr = run_dfl_mlp(n_nodes=n, graph=graph, per_node=per, rounds=rounds)
+        if base_final is None:
+            base_final = hist["test_loss"][-1]
+        emit(
+            f"fig7.n{n}_per{per}",
+            spr * 1e6,
+            f"final={hist['test_loss'][-1]:.3f};isolated_ref={base_final:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,96 @@
+"""Kernel micro-benchmarks.
+
+CPU container caveat: the Pallas kernels target TPU; ``interpret=True``
+executes the kernel bodies in Python (correctness, not speed).  The
+*timed* numbers here are the jitted XLA paths the kernels replace —
+``decavg_mix_ref`` / ``attention_ref`` / ``rwkv6_ref`` — giving the CPU
+baseline and the derived GFLOP counts the TPU kernels would run at;
+interpret-mode allclose is re-verified per shape.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash.flash import flash_mha
+from repro.kernels.flash.ref import attention_ref
+from repro.kernels.mix.mix import mix_matmul
+from repro.kernels.mix.ref import decavg_mix_ref
+from repro.kernels.rwkv.rwkv import rwkv6_chunked
+from repro.kernels.rwkv.ref import rwkv6_ref
+
+from .common import emit
+
+
+def _time(f, *args, iters=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run(quick: bool = True) -> None:
+    # ---- mix ----------------------------------------------------------
+    n, d = (16, 1_000_000) if quick else (32, 10_000_000)
+    m = jax.random.uniform(jax.random.PRNGKey(0), (n, n))
+    m = m / m.sum(1, keepdims=True)
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, d), jnp.float32)
+    ref = jax.jit(decavg_mix_ref)
+    sec = _time(ref, m, w)
+    flops = 2 * n * n * d
+    got = mix_matmul(m, w[:, :4096], interpret=True)
+    err = float(jnp.abs(got - decavg_mix_ref(m, w[:, :4096])).max())
+    emit("kernels.mix", sec * 1e6, f"gflops={flops / sec / 1e9:.1f};interpret_allclose_err={err:.1e}")
+
+    # ---- flash --------------------------------------------------------
+    b, h, kvh, s, hd = (1, 4, 2, 1024, 64) if quick else (2, 8, 4, 4096, 128)
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, kvh, s, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, kvh, s, hd), jnp.float32)
+    ref_f = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    sec = _time(ref_f, q, k, v)
+    flops = 4 * b * h * s * s * hd / 2  # causal half
+    sub = 256
+    err = float(
+        jnp.abs(
+            flash_mha(q[:, :, :sub], k[:, :, :sub], v[:, :, :sub], causal=True, interpret=True)
+            - attention_ref(q[:, :, :sub], k[:, :, :sub], v[:, :, :sub], causal=True)
+        ).max()
+    )
+    emit("kernels.flash", sec * 1e6, f"gflops={flops / sec / 1e9:.1f};interpret_allclose_err={err:.1e}")
+    # sliding-window early-exit factor
+    ref_w = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True, window=128))
+    sec_w = _time(ref_w, q, k, v)
+    emit("kernels.flash_swa", sec_w * 1e6, f"xla_window_speedup={sec / sec_w:.2f}x_(kernel_skips_blocks_on_tpu)")
+
+    # ---- rwkv ---------------------------------------------------------
+    bh, l, m_ = (8, 2048, 64) if quick else (32, 8192, 64)
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r = jax.random.normal(ks[0], (bh, l, m_))
+    k2 = jax.random.normal(ks[1], (bh, l, m_)) * 0.3
+    v2 = jax.random.normal(ks[2], (bh, l, m_))
+    w2 = jnp.exp(-jnp.exp(jnp.clip(jax.random.normal(ks[3], (bh, l, m_)), -8, 1)))
+    u2 = jnp.abs(jax.random.normal(ks[4], (bh, m_))) * 0.3
+    ref_r = jax.jit(rwkv6_ref)
+    sec = _time(ref_r, r, k2, v2, w2, u2)
+    # chunked form flops: per chunk c: 3 matmuls ≈ 2c²M + 4cM²
+    c = 32
+    flops = (l // c) * (2 * c * c * m_ + 4 * c * m_ * m_) * bh
+    sub = 128
+    err = float(
+        jnp.abs(
+            rwkv6_chunked(r[:2, :sub], k2[:2, :sub], v2[:2, :sub], w2[:2, :sub], u2[:2], interpret=True)
+            - rwkv6_ref(r[:2, :sub], k2[:2, :sub], v2[:2, :sub], w2[:2, :sub], u2[:2])
+        ).max()
+    )
+    emit("kernels.rwkv6", sec * 1e6, f"gflops={flops / sec / 1e9:.1f};interpret_allclose_err={err:.1e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads results/dryrun/*.json written by ``python -m repro.launch.dryrun`` and
+emits one row per (arch × shape × mesh) with the three roofline terms, the
+dominant bottleneck and the useful-FLOPs ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+RESULTS_DIR = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def run(quick: bool = True) -> None:
+    files = sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json")))
+    if not files:
+        emit("roofline.NOTE", 0.0, f"no dry-run artifacts in {RESULTS_DIR}; run python -m repro.launch.dryrun --all")
+        return
+    n_ok = n_err = 0
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        tag = f"roofline.{rec['arch']}.{rec['shape']}.{rec['mesh']}"
+        if rec.get("mixing") and rec["mixing"] != "dense":
+            tag += f".{rec['mixing']}"
+        if rec["status"] != "ok":
+            n_err += 1
+            emit(tag, 0.0, f"ERROR={rec.get('error','?')[:80]}")
+            continue
+        n_ok += 1
+        t = rec["terms"]
+        emit(
+            tag,
+            rec.get("lower_compile_s", 0.0) * 1e6,
+            f"dominant={t['dominant']};compute_s={t['compute_s']:.3e};"
+            f"memory_s={t['memory_s']:.3e};collective_s={t['collective_s']:.3e};"
+            f"useful_ratio={rec.get('useful_flops_ratio', 0):.2f}",
+        )
+    emit("roofline.summary", 0.0, f"ok={n_ok};errors={n_err}")
+
+
+if __name__ == "__main__":
+    run()

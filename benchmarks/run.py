@@ -1,0 +1,66 @@
+"""Benchmark harness entry point — one module per paper figure/table plus
+kernel micro-benches and the roofline report.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig1,fig5,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (also collected in
+benchmarks.common.ROWS).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    fig1_scaling,
+    fig2_failures,
+    fig3_dynamics,
+    fig4_estimates,
+    fig5_vsteady,
+    fig6_env,
+    fig7_constant_data,
+    kernels_bench,
+    roofline_report,
+)
+from .common import emit
+
+MODULES = {
+    "fig1": fig1_scaling,
+    "fig2": fig2_failures,
+    "fig3": fig3_dynamics,
+    "fig4": fig4_estimates,
+    "fig5": fig5_vsteady,
+    "fig6": fig6_env,
+    "fig7": fig7_constant_data,
+    "kernels": kernels_bench,
+    "roofline": roofline_report,
+}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--full", action="store_true", help="paper-scale (slow) settings")
+    p.add_argument("--only", type=str, default=None, help="comma-separated subset")
+    args = p.parse_args()
+
+    names = list(MODULES) if not args.only else [s.strip() for s in args.only.split(",")]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        try:
+            MODULES[name].run(quick=not args.full)
+        except Exception as e:  # noqa: BLE001 — keep the harness sweeping
+            failures += 1
+            emit(f"{name}.FAILED", 0.0, f"{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.time() - t0:.0f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Topology study: how the communication network shapes DFL.
+
+For several network families at n = 16 this example reports
+    · ‖v_steady‖ (the compression factor → the init gain),
+    · spectral gap and the mixing-time estimate (stabilisation rounds, §4.5),
+    · the resulting test-loss trajectory with the corrected init.
+
+Run:  PYTHONPATH=src python examples/topology_study.py
+"""
+import numpy as np
+import jax
+
+from repro.core import mixing as M
+from repro.core import topology as T
+from repro.core.initialisation import InitConfig, gain_from_graph
+from repro.data import mnist_like, node_batch_iterator, node_datasets
+from repro.fed import init_fl_state, make_eval_fn, make_round_fn, train_loop
+from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
+from repro.optim import sgd
+
+N, PER, ROUNDS = 16, 128, 30
+
+GRAPHS = {
+    "complete": T.complete(N),
+    "4-regular": T.random_k_regular(N, 4, seed=0),
+    "barabasi-albert m=4": T.barabasi_albert(N, 4, seed=0),
+    "ring": T.ring(N),
+    "torus 4x4": T.torus_lattice((4, 4)),
+}
+
+ds = mnist_like(N * PER + 512, seed=0)
+parts = [np.arange(i * PER, (i + 1) * PER) for i in range(N)]
+xs, ys = node_datasets(ds, parts)
+test = (ds.x[-512:], ds.y[-512:])
+loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
+opt = sgd(1e-3, 0.5)
+eval_fn = make_eval_fn(loss_fn)
+
+print(f"{'topology':22s} {'‖v_steady‖':>11s} {'gain':>6s} {'gap':>7s} {'t_mix':>6s}  final test loss")
+for name, graph in GRAPHS.items():
+    vnorm = M.v_steady_norm(graph)
+    gain = gain_from_graph(graph)
+    gap = M.spectral_gap(graph)
+    tmix = M.mixing_time_estimate(graph)
+
+    def batches():
+        it = node_batch_iterator(xs, ys, 16, seed=0)
+        while True:
+            bs = [next(it) for _ in range(4)]
+            yield (np.stack([b.x for b in bs], 1), np.stack([b.y for b in bs], 1))
+
+    init_one = lambda k: init_mlp(InitConfig("he_normal", gain), k)
+    state = init_fl_state(jax.random.PRNGKey(0), N, init_one, opt)
+    state, hist = train_loop(
+        state, make_round_fn(loss_fn, opt, graph), batches(), n_rounds=ROUNDS,
+        eval_every=ROUNDS - 1, eval_fn=eval_fn, eval_batch=test,
+    )
+    print(f"{name:22s} {vnorm:11.4f} {gain:6.2f} {gap:7.4f} {tmix:6.1f}  {hist['test_loss'][-1]:.4f}")

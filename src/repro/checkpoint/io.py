@@ -1,0 +1,119 @@
+"""Msgpack-based pytree checkpointing.
+
+Layout: one ``.ckpt`` file = msgpack map {treedef: str, leaves: [bytes...],
+meta: {...}} with each leaf serialised as (dtype, shape, raw bytes).  No
+orbax offline, so this is the deployable minimum: atomic writes (tmp +
+rename), dtype/shape round-trip including bf16, and a step-numbered
+directory convention with a LATEST pointer.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["save_pytree", "load_pytree", "save_train_state", "restore_train_state"]
+
+_BF16 = "bfloat16"
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(jax.device_get(x))
+    if arr.dtype == jnp.bfloat16:
+        return {"dtype": _BF16, "shape": list(arr.shape), "data": arr.view(np.uint16).tobytes()}
+    return {"dtype": arr.dtype.str, "shape": list(arr.shape), "data": arr.tobytes()}
+
+
+def _unpack_leaf(d: dict) -> np.ndarray:
+    shape = tuple(d["shape"])
+    if d["dtype"] == _BF16:
+        return np.frombuffer(d["data"], dtype=np.uint16).reshape(shape).view(jnp.bfloat16)
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(shape)
+
+
+def save_pytree(path: str, tree: PyTree, meta: dict | None = None) -> None:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "structure": _structure_of(tree),
+        "leaves": [_pack_leaf(x) for x in leaves],
+        "meta": meta or {},
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def _structure_of(tree: PyTree):
+    """JSON-able skeleton (dicts/lists/None markers) used to rebuild treedef."""
+    if isinstance(tree, dict):
+        return {"__kind__": "dict", "items": {k: _structure_of(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        kind = "list" if isinstance(tree, list) else "tuple"
+        return {"__kind__": kind, "items": [_structure_of(v) for v in tree]}
+    if hasattr(tree, "_fields"):  # NamedTuple
+        return {
+            "__kind__": "namedtuple",
+            "name": type(tree).__name__,
+            "items": {k: _structure_of(getattr(tree, k)) for k in tree._fields},
+        }
+    return {"__kind__": "leaf"}
+
+
+def _rebuild(structure, leaves: list) -> PyTree:
+    kind = structure["__kind__"]
+    if kind == "leaf":
+        return leaves.pop(0)
+    if kind == "dict":
+        return {k: _rebuild(v, leaves) for k, v in structure["items"].items()}
+    if kind == "list":
+        return [_rebuild(v, leaves) for v in structure["items"]]
+    if kind == "tuple":
+        return tuple(_rebuild(v, leaves) for v in structure["items"])
+    if kind == "namedtuple":
+        # restored as plain dict: callers restoring optimizer state should
+        # re-wrap; training restore does this via tree_unflatten on a template
+        return {k: _rebuild(v, leaves) for k, v in structure["items"].items()}
+    raise ValueError(f"unknown structure kind {kind}")
+
+
+def load_pytree(path: str, template: PyTree | None = None) -> tuple[PyTree, dict]:
+    """Load a checkpoint.  With ``template``, leaves are unflattened into the
+    template's exact treedef (NamedTuples included); without it, the stored
+    dict/list skeleton is rebuilt."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves = [_unpack_leaf(d) for d in payload["leaves"]]
+    if template is not None:
+        treedef = jax.tree_util.tree_structure(template)
+        if treedef.num_leaves != len(leaves):
+            raise ValueError(f"checkpoint has {len(leaves)} leaves, template wants {treedef.num_leaves}")
+        return jax.tree_util.tree_unflatten(treedef, leaves), payload["meta"]
+    return _rebuild(payload["structure"], leaves), payload["meta"]
+
+
+def save_train_state(ckpt_dir: str, step: int, state: PyTree, meta: dict | None = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
+    save_pytree(path, state, meta={"step": step, **(meta or {})})
+    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+        json.dump({"step": step, "path": path}, f)
+    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"), os.path.join(ckpt_dir, "LATEST"))
+    return path
+
+
+def restore_train_state(ckpt_dir: str, template: PyTree | None = None) -> tuple[PyTree, dict] | None:
+    latest = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(latest):
+        return None
+    with open(latest) as f:
+        info = json.load(f)
+    return load_pytree(info["path"], template=template)

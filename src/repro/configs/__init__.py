@@ -1,0 +1,2 @@
+"""Architecture configs: the 10 assigned architectures + the paper's own."""
+from .base import ArchConfig, ffn_kinds, get_config, get_reduced_config, layer_kinds, list_archs

@@ -1,0 +1,30 @@
+"""Core contribution of the paper: network-aware uncoordinated initialisation
+and DecAvg aggregation for decentralised federated learning."""
+from . import decavg, diffusion, gossip, initialisation, mixing, topology
+from .decavg import (
+    failure_receive_matrix,
+    link_failure_mask,
+    mix_array,
+    mix_pytree,
+    mix_pytree_circulant,
+    node_failure_mask,
+)
+from .diffusion import DiffusionResult, run_diffusion, sigma_ap_prediction
+from .initialisation import (
+    InitConfig,
+    gain_from_estimates,
+    gain_from_graph,
+    scaled_init,
+)
+from .mixing import (
+    mixing_matrix,
+    mixing_time_estimate,
+    receive_matrix,
+    rewire_to_assortativity,
+    spectral_gap,
+    v_steady,
+    v_steady_norm,
+    v_steady_norm_closed_form,
+    v_steady_norm_from_degree_sample,
+)
+from .topology import Graph

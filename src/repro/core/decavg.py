@@ -1,0 +1,140 @@
+"""DecAvg / "Decay" aggregation (paper Eq. 2) and its TPU renderings.
+
+Three implementations of the same operator, all consuming parameter pytrees
+with a leading node axis ``(n, ...)``:
+
+1. ``mix_pytree``            — dense ``w_new[i] = Σ_j M[i,j] w[j]`` einsum with
+                               the receive matrix.  Reference semantics, works
+                               for any topology, any failure pattern.  Under
+                               pjit with the node axis sharded over ``data``,
+                               XLA lowers the contraction to an all-gather of
+                               the full parameter ensemble — the *paper-faithful
+                               baseline* of the §Perf story.
+2. ``mix_pytree_circulant``  — for circulant topologies: k ``ppermute`` shifts
+                               + local weighted sum inside ``shard_map``.  Moves
+                               only degree·|w| bytes instead of n·|w| — the
+                               beyond-paper optimised collective schedule.
+3. Pallas kernel             — ``repro.kernels.mix`` provides the blocked
+                               (d × n)·(n × n) product for the dense form's
+                               on-chip hot-spot (see kernels/mix).
+
+Failure modelling (paper §4.1, Fig. 2): each *link* or *node* is active per
+round with probability p; inactive nodes still train locally but are
+momentarily isolated.  ``failure_receive_matrix`` rebuilds the round's
+effective row-stochastic operator.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .topology import Graph
+
+__all__ = [
+    "mix_pytree",
+    "mix_array",
+    "mix_pytree_circulant",
+    "failure_receive_matrix",
+    "link_failure_mask",
+    "node_failure_mask",
+]
+
+PyTree = Any
+
+
+def mix_array(m: jax.Array, x: jax.Array) -> jax.Array:
+    """``x_new[i] = Σ_j m[i, j] x[j]`` over the leading node axis.
+
+    fp32 accumulation regardless of parameter dtype: the mixing weights are
+    O(1/k) and parameter magnitudes shrink by ‖v_steady‖ during diffusion, so
+    bf16 accumulation would lose exactly the signal the paper studies.
+
+    Implemented as a tensordot over the node axis WITHOUT flattening: under
+    pjit the trailing dims keep their model-axis sharding, so the only
+    communication is the node-axis gather inherent to dense mixing (a
+    reshape-to-(n, -1) here would force a full model-axis all-gather).
+    """
+    out = jnp.tensordot(m, x, axes=[[1], [0]], preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def mix_pytree(m: jax.Array, params: PyTree) -> PyTree:
+    """DecAvg over every leaf of a node-stacked parameter pytree."""
+    return jax.tree_util.tree_map(lambda w: mix_array(m, w), params)
+
+
+def mix_pytree_circulant(
+    params: PyTree,
+    offsets: Sequence[int],
+    axis_name: str | Sequence[str],
+    weights: jax.Array | None = None,
+) -> PyTree:
+    """Circulant DecAvg on a sharded node axis via ``jax.lax.ppermute``.
+
+    Must be called inside ``shard_map`` where ``axis_name`` indexes the node
+    shards (one node per device group along the FL axis).  For a circulant
+    graph with offset set S (degree k = 2|S|), the DecAvg receive weights with
+    uniform data are 1/(k+1) for self and each of the 2|S| neighbours.
+
+    weights: optional (2|S|+1,) receive weights ordered [self, +s1, -s1, ...],
+    for non-uniform data sizes.
+    """
+    n_terms = 2 * len(offsets) + 1
+    if weights is None:
+        w = jnp.full((n_terms,), 1.0 / n_terms, dtype=jnp.float32)
+    else:
+        w = weights.astype(jnp.float32)
+
+    axis_size = jax.lax.psum(1, axis_name)
+
+    def mix_leaf(x: jax.Array) -> jax.Array:
+        acc = w[0] * x.astype(jnp.float32)
+        t = 1
+        for s in offsets:
+            for sign in (1, -1):
+                perm = [(i, (i + sign * s) % axis_size) for i in range(axis_size)]
+                shifted = jax.lax.ppermute(x, axis_name, perm)
+                acc = acc + w[t] * shifted.astype(jnp.float32)
+                t += 1
+        return acc.astype(x.dtype)
+
+    return jax.tree_util.tree_map(mix_leaf, params)
+
+
+def link_failure_mask(key: jax.Array, graph: Graph, p: float) -> jax.Array:
+    """Symmetric Bernoulli(p) mask over the graph's edges (Fig. 2a)."""
+    a = jnp.asarray(graph.adjacency)
+    u = jax.random.uniform(key, a.shape)
+    upper = jnp.triu(u, k=1)
+    keep = (upper < p) & (jnp.triu(a, k=1) > 0)
+    keep = keep | keep.T
+    return keep.astype(a.dtype)
+
+
+def node_failure_mask(key: jax.Array, graph: Graph, p: float) -> jax.Array:
+    """Adjacency with all edges of inactive nodes removed (Fig. 2b).
+
+    An inactive node neither sends nor receives this round, but keeps training
+    locally (its receive row collapses to identity below).
+    """
+    a = jnp.asarray(graph.adjacency)
+    active = jax.random.bernoulli(key, p, (graph.n,))
+    m = active[:, None] & active[None, :]
+    return (a * m).astype(a.dtype)
+
+
+def failure_receive_matrix(adjacency: jax.Array, data_sizes: jax.Array | None = None) -> jax.Array:
+    """Row-stochastic DecAvg receive operator for a (possibly masked) adjacency.
+
+    Jax-traceable version of ``core.mixing.receive_matrix`` so per-round
+    failure masks can stay on-device inside the jitted round function.
+    """
+    n = adjacency.shape[0]
+    b = adjacency.astype(jnp.float32) + jnp.eye(n, dtype=jnp.float32)
+    if data_sizes is not None:
+        b = b * data_sizes[None, :].astype(jnp.float32)
+    return b / b.sum(axis=1, keepdims=True)

@@ -1,0 +1,82 @@
+"""Gossip protocols for uncoordinated estimation (paper §4.4, ref [35]).
+
+The init gain needs ``‖v_steady‖``, which a node can estimate from (a) the
+system size n and a known network-formation family, or (b) a polled sample of
+the degree distribution.  Both are obtainable without coordination:
+
+* ``push_sum``          — Kempe-style push-sum average consensus; averaging a
+                          one-hot vector yields 1/n at every node (size
+                          estimation), averaging local degrees yields ⟨k⟩.
+* ``estimate_size``     — n̂ from push-sum of a leader one-hot.
+* ``poll_degrees``      — random-walk degree polling with the excess-degree
+                          (q(k)) bias corrected by importance re-weighting.
+
+These run on the same ``Graph``/receive-matrix machinery as DecAvg itself, so
+the estimation traffic is the same kind of neighbour exchange the training
+loop already performs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .mixing import receive_matrix
+from .topology import Graph
+
+__all__ = ["push_sum", "estimate_size", "estimate_mean_degree", "poll_degrees"]
+
+
+def push_sum(graph: Graph, values: np.ndarray, rounds: int) -> np.ndarray:
+    """Push-sum (ratio) gossip: every node tracks (s, w); both mix with the
+    column-stochastic send weights; s/w converges to the true average at every
+    node regardless of the non-doubly-stochastic mixing (mass conservation).
+    """
+    n = graph.n
+    # column-stochastic send operator: node j sends 1/(k_j+1) to each of
+    # itself and its neighbours — mass-conserving, as push-sum requires.
+    from .mixing import mixing_matrix
+
+    ap = mixing_matrix(graph)  # columns sum to 1
+    s = np.asarray(values, dtype=np.float64).copy()
+    w = np.ones(n, dtype=np.float64)
+    for _ in range(rounds):
+        s = ap @ s
+        w = ap @ w
+    return s / w
+
+
+def estimate_size(graph: Graph, rounds: int, leader: int = 0) -> np.ndarray:
+    """Every node's estimate of n after ``rounds`` of push-sum (§4.4)."""
+    one_hot = np.zeros(graph.n)
+    one_hot[leader] = 1.0
+    avg = push_sum(graph, one_hot, rounds)
+    return 1.0 / np.maximum(avg, 1e-300)
+
+
+def estimate_mean_degree(graph: Graph, rounds: int) -> np.ndarray:
+    return push_sum(graph, graph.degrees.astype(np.float64), rounds)
+
+
+def poll_degrees(graph: Graph, start: int, walk_length: int, n_walks: int, seed: int = 0,
+                 correct_bias: bool = True) -> np.ndarray:
+    """Sample degrees by random walks from ``start``.
+
+    A simple random walk visits nodes ∝ degree (the excess-degree bias q(k),
+    §3); with ``correct_bias`` we resample ∝ 1/k to recover p(k), which is the
+    distribution ``v_steady_norm_from_degree_sample`` expects.
+    """
+    rng = np.random.default_rng(seed)
+    a = graph.adjacency
+    samples: list[int] = []
+    for _ in range(n_walks):
+        v = start
+        for _ in range(walk_length):
+            nbrs = np.nonzero(a[v])[0]
+            v = int(rng.choice(nbrs))
+        samples.append(int(graph.degrees[v]))
+    ks = np.asarray(samples, dtype=np.float64)
+    if not correct_bias:
+        return ks
+    # importance resample ∝ 1/k to undo the stationary ∝ k visit bias
+    p = (1.0 / ks) / (1.0 / ks).sum()
+    idx = rng.choice(len(ks), size=len(ks), p=p)
+    return ks[idx]

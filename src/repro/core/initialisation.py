@@ -1,0 +1,141 @@
+"""Uncoordinated, network-aware parameter initialisation (paper §4, Algorithm 1).
+
+The technique: each node draws its parameters *independently* with a standard
+architecture-appropriate initialiser (He et al. [33] for ReLU nets, Glorot for
+tanh/linear, truncated-normal for transformers), then **rescales every
+randomly-drawn weight distribution by ``gain = ‖v_steady‖⁻¹``** so that after
+the early diffusion phase compresses per-node parameter variance by
+``‖v_steady‖`` (§4.3), the surviving distribution is exactly the one the
+initialiser intended.
+
+Structured parameters (zeros, ones, RoPE-free, SSM decay spectra) are *not*
+rescaled — the σ_init analysis only covers zero-mean random draws; under
+DecAvg, deterministic equal values are a fixed point of the mixing operator
+(see DESIGN.md §4 caveat).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .mixing import v_steady_norm, v_steady_norm_from_degree_sample
+from .topology import Graph
+
+__all__ = [
+    "InitConfig",
+    "gain_from_graph",
+    "gain_from_estimates",
+    "he_normal",
+    "he_uniform",
+    "glorot_normal",
+    "glorot_uniform",
+    "trunc_normal",
+    "scaled_init",
+]
+
+Distribution = Literal["he_normal", "he_uniform", "glorot_normal", "glorot_uniform", "trunc_normal"]
+
+
+@dataclasses.dataclass(frozen=True)
+class InitConfig:
+    """How to initialise one node's parameters.
+
+    gain: the paper's correction factor, ``‖v_steady‖⁻¹`` (1.0 reproduces the
+    *uncorrected* He-et-al. baseline of Fig. 1, dashed lines).
+    """
+
+    distribution: Distribution = "he_normal"
+    gain: float = 1.0
+
+    def replace(self, **kw) -> "InitConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def gain_from_graph(graph: Graph) -> float:
+    """Perfect-knowledge gain: ``‖v_steady‖⁻¹`` from the full topology (§4.3).
+
+    For random k-regular / ER / torus graphs this is ≈ √n, the factor the
+    paper multiplies into the He standard deviation.
+    """
+    return 1.0 / v_steady_norm(graph)
+
+
+def gain_from_estimates(
+    n_estimate: float,
+    degree_sample: np.ndarray | None = None,
+    family_exponent: float | None = None,
+) -> float:
+    """Imperfect-knowledge gain (§4.4).
+
+    Priority: a sampled degree distribution (gossip poll) → closed-form ‖v‖
+    estimate; else a known family exponent α with ``‖v‖ = n^-α`` (α = 1/2 for
+    homogeneous graphs, Fig. 5); else assume homogeneous (α = 1/2 ⇒ gain = √n).
+    Fig. 4 shows the method is robust to substantial mis-estimation of n.
+    """
+    if degree_sample is not None:
+        return 1.0 / v_steady_norm_from_degree_sample(np.asarray(degree_sample), int(round(n_estimate)))
+    alpha = 0.5 if family_exponent is None else family_exponent
+    return float(n_estimate**alpha)
+
+
+def _fans(shape: tuple[int, ...]) -> tuple[float, float]:
+    """fan_in/fan_out for dense (in, out), conv (kh, kw, cin, cout) and stacked shapes."""
+    if len(shape) == 1:
+        return float(shape[0]), float(shape[0])
+    if len(shape) == 2:
+        return float(shape[0]), float(shape[1])
+    receptive = math.prod(shape[:-2])
+    return float(shape[-2] * receptive), float(shape[-1] * receptive)
+
+
+def he_normal(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32, gain: float = 1.0) -> jax.Array:
+    """He et al. [33] fan-in normal init × the paper's gain correction."""
+    fan_in, _ = _fans(shape)
+    std = math.sqrt(2.0 / fan_in) * gain
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def he_uniform(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32, gain: float = 1.0) -> jax.Array:
+    fan_in, _ = _fans(shape)
+    limit = math.sqrt(6.0 / fan_in) * gain
+    return jax.random.uniform(key, shape, dtype, -limit, limit)
+
+
+def glorot_normal(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32, gain: float = 1.0) -> jax.Array:
+    fan_in, fan_out = _fans(shape)
+    std = math.sqrt(2.0 / (fan_in + fan_out)) * gain
+    return std * jax.random.normal(key, shape, dtype)
+
+
+def glorot_uniform(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32, gain: float = 1.0) -> jax.Array:
+    fan_in, fan_out = _fans(shape)
+    limit = math.sqrt(6.0 / (fan_in + fan_out)) * gain
+    return jax.random.uniform(key, shape, dtype, -limit, limit)
+
+
+def trunc_normal(
+    key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32, gain: float = 1.0, std: float | None = None
+) -> jax.Array:
+    """Truncated-normal (±2σ) fan-in init — the transformer-zoo default."""
+    fan_in, _ = _fans(shape)
+    s = (std if std is not None else math.sqrt(1.0 / fan_in)) * gain
+    return s * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+_DISTS = {
+    "he_normal": he_normal,
+    "he_uniform": he_uniform,
+    "glorot_normal": glorot_normal,
+    "glorot_uniform": glorot_uniform,
+    "trunc_normal": trunc_normal,
+}
+
+
+def scaled_init(cfg: InitConfig, key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+    """Draw one weight tensor per ``cfg`` (Algorithm 1, lines 3–6)."""
+    return _DISTS[cfg.distribution](key, shape, dtype, gain=cfg.gain)

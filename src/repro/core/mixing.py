@@ -1,0 +1,225 @@
+"""Mixing matrices, steady-state vectors and mixing-time estimates (paper §4.3–4.5).
+
+Conventions
+-----------
+The paper arranges node parameters as a ``d × n`` matrix ``W`` whose *columns*
+are nodes, and evolves ``W_t = W_init A'^t`` with the *column-stochastic*
+matrix (Eq. 3)::
+
+    A'_ij = (A_ij + I_ij) / sum_k (A_kj + I_kj)
+
+i.e. column j holds the weights node j *sends*: node j keeps 1/(k_j+1) of its
+own parameters and gives 1/(k_j+1) to each neighbour.  Our code stores node
+parameters with a *leading* node axis (``(n, ...)`` pytrees), so the DecAvg
+update reads ``w_new[i] = sum_j M[i, j] w[j]`` with the *row-stochastic*
+matrix ``M = A'`` read row-wise... careful: with uniform data-set sizes
+(``beta_i ~ 1/(k_i+1)``, §3) the receive-side weights are ``M[i, j] =
+(A_ij + I_ij) / (k_i + 1)`` — row-stochastic, and equal to ``A'`` transposed
+only for regular graphs.  Both operators are exposed below; ``M`` ("receive
+form") drives the aggregation, ``A'`` ("send form", Eq. 3) drives the
+Markov-chain analysis.  For undirected graphs they are transposes of each
+other up to the degree normalisation and share the same spectrum.
+
+``v_steady`` is the stationary vector of ``A'`` (``A' v = v``, sum-normalised).
+For undirected graphs it has the closed form ``v_i = (k_i + 1) / sum_j (k_j + 1)``
+(detailed balance of the lazy-ish walk); the general directed/weighted case
+falls back to power iteration.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .topology import Graph
+
+__all__ = [
+    "mixing_matrix",
+    "receive_matrix",
+    "v_steady",
+    "v_steady_norm",
+    "v_steady_norm_closed_form",
+    "v_steady_norm_from_degree_sample",
+    "spectral_gap",
+    "mixing_time_estimate",
+    "rewire_to_assortativity",
+]
+
+
+def _augmented(adjacency: np.ndarray, self_weights: np.ndarray | None = None) -> np.ndarray:
+    """A + diag(self-weights); identity self-weights per Eq. 3 unless overridden.
+
+    The paper (§4.3, last paragraph) notes weighted networks replace I with a
+    diagonal matrix of self-weights.
+    """
+    n = adjacency.shape[0]
+    if self_weights is None:
+        s = np.eye(n, dtype=np.float64)
+    else:
+        s = np.diag(np.asarray(self_weights, dtype=np.float64))
+    return adjacency.astype(np.float64) + s
+
+
+def mixing_matrix(graph: Graph, self_weights: np.ndarray | None = None) -> np.ndarray:
+    """Column-stochastic ``A'`` of Eq. 3 (columns sum to 1)."""
+    b = _augmented(graph.adjacency, self_weights)
+    col = b.sum(axis=0, keepdims=True)
+    if np.any(col == 0):
+        raise ValueError("graph has an isolated node with zero self-weight")
+    return (b / col).astype(np.float64)
+
+
+def receive_matrix(graph: Graph, data_sizes: np.ndarray | None = None) -> np.ndarray:
+    """Row-stochastic DecAvg receive operator ``M`` (Eq. 2).
+
+    ``w_new[i] = sum_j M[i, j] w[j]`` with
+    ``M[i, j] = |D_j| (A_ij + I_ij) / (|D_i| + sum_{l in N_i} |D_l|)``.
+    With equal data sizes this is ``(A + I)`` row-normalised, i.e.
+    ``beta ~ 1/(k_i + 1)`` exactly as §3 assumes.
+    """
+    n = graph.n
+    b = graph.adjacency.astype(np.float64) + np.eye(n)
+    if data_sizes is None:
+        w = b
+    else:
+        d = np.asarray(data_sizes, dtype=np.float64)
+        w = b * d[None, :]
+    row = w.sum(axis=1, keepdims=True)
+    return w / row
+
+
+def v_steady(graph: Graph, self_weights: np.ndarray | None = None, tol: float = 1e-12, max_iter: int = 100_000) -> np.ndarray:
+    """Stationary vector of ``A'``: ``A' v = v``, normalised to sum to 1.
+
+    Closed form for undirected graphs with identity self-weights; power
+    iteration otherwise (guaranteed to converge: self-loops make A' aperiodic,
+    §4.3).
+    """
+    if not graph.directed and self_weights is None:
+        k = graph.degrees.astype(np.float64)
+        v = k + 1.0
+        return v / v.sum()
+    ap = mixing_matrix(graph, self_weights)
+    n = ap.shape[0]
+    v = np.full(n, 1.0 / n)
+    for _ in range(max_iter):
+        v_next = ap @ v
+        v_next /= v_next.sum()
+        if np.abs(v_next - v).max() < tol:
+            return v_next
+        v = v_next
+    raise RuntimeError("power iteration for v_steady did not converge (is the graph strongly connected?)")
+
+
+def v_steady_norm(graph: Graph, self_weights: np.ndarray | None = None) -> float:
+    """``‖v_steady‖_2`` — the parameter-compression factor of §4.3.
+
+    ``lim_{t→∞} σ_ap ≈ σ_init · ‖v_steady‖``; the paper's init multiplies the
+    He/Glorot σ by ``‖v_steady‖⁻¹``.
+    """
+    return float(np.linalg.norm(v_steady(graph, self_weights)))
+
+
+def v_steady_norm_closed_form(degrees: np.ndarray) -> float:
+    """``‖v_steady‖`` from a *full* degree sequence (undirected closed form)."""
+    k1 = np.asarray(degrees, dtype=np.float64) + 1.0
+    return float(np.sqrt((k1**2).sum()) / k1.sum())
+
+
+def v_steady_norm_from_degree_sample(degree_sample: np.ndarray, n: int) -> float:
+    """Estimate ``‖v_steady‖`` from a degree *sample* plus an estimate of n (§4.4).
+
+    ``‖v‖² = Σ(k+1)² / (Σ(k+1))² ≈ ⟨(k+1)²⟩ / (n ⟨k+1⟩²)`` — this is what a
+    node can compute after polling degrees through a gossip protocol.
+    """
+    k1 = np.asarray(degree_sample, dtype=np.float64) + 1.0
+    return float(np.sqrt((k1**2).mean() / (n * (k1.mean() ** 2))))
+
+
+def spectral_gap(graph: Graph, self_weights: np.ndarray | None = None) -> float:
+    """1 - |λ₂| of ``A'`` — controls the convergence rate (§4.5, [46])."""
+    ap = mixing_matrix(graph, self_weights)
+    eig = np.linalg.eigvals(ap)
+    eig = np.sort(np.abs(eig))[::-1]
+    return float(1.0 - eig[1])
+
+
+def mixing_time_estimate(graph: Graph, eps: float = 0.25) -> float:
+    """Relaxation-time upper-bound estimate of the ε-mixing time (§4.5).
+
+    ``t_mix(ε) <= log(1/(ε·min_i v_i)) / gap`` for reversible chains
+    [Levin & Peres, Thm 12.4].  The dry-run/benchmarks use this to predict the
+    σ_an stabilisation round counts; the paper's asymptotics (O(log n) for
+    k-regular expanders, O(log² n) for supercritical ER, O(d²·n^{2/d}) for
+    d-dim tori) emerge from the gap scaling of those families.
+    """
+    gap = spectral_gap(graph)
+    v = v_steady(graph)
+    return float(np.log(1.0 / (eps * v.min())) / max(gap, 1e-12))
+
+
+def rewire_to_assortativity(
+    graph: Graph,
+    target: float,
+    seed: int = 0,
+    steps: int = 200_000,
+    t0: float = 0.05,
+    cooling: float = 0.9995,
+) -> Graph:
+    """Degree-preserving edge-swap annealing toward a target assortativity (§4.4, Fig. 5c).
+
+    Select two edges (a,b),(c,d), propose the swap (a,d),(c,b); accept based on
+    |assortativity - target| improvement with a slowly-cooled temperature.
+    Degrees (hence ``v_steady``) are invariant under the swap — that is the
+    point of Fig. 5(c).
+    """
+    rng = np.random.default_rng(seed)
+    a = graph.adjacency.copy()
+    k = a.sum(axis=1)
+    sum_k = k.sum()
+
+    # incremental assortativity bookkeeping: r is a function of S1 = Σ_e k_i k_j,
+    # with the degree-dependent terms constant under degree-preserving swaps.
+    ii, jj = np.nonzero(np.triu(a))
+    edges = list(zip(ii.tolist(), jj.tolist()))
+    m = len(edges)
+
+    # moments over edge ends (each edge counted in both directions)
+    ksum = sum(k[i] + k[j] for i, j in edges)
+    k2sum = sum(k[i] ** 2 + k[j] ** 2 for i, j in edges)
+    mean = ksum / (2 * m)
+    var = k2sum / (2 * m) - mean**2
+    if var <= 0:
+        return graph
+
+    def r_of(s1: float) -> float:
+        return (s1 / m - mean**2) / var
+
+    s1 = float(sum(k[i] * k[j] for i, j in edges))
+    temp = t0
+    for _ in range(steps):
+        e1, e2 = rng.integers(m), rng.integers(m)
+        if e1 == e2:
+            continue
+        a1, b1 = edges[e1]
+        c1, d1 = edges[e2]
+        if rng.random() < 0.5:
+            c1, d1 = d1, c1
+        # proposed new edges (a1,d1), (c1,b1)
+        if len({a1, b1, c1, d1}) < 4:
+            continue
+        if a[a1, d1] or a[c1, b1]:
+            continue
+        s1_new = s1 - k[a1] * k[b1] - k[c1] * k[d1] + k[a1] * k[d1] + k[c1] * k[b1]
+        delta = abs(r_of(s1_new) - target) - abs(r_of(s1) - target)
+        if delta < 0 or rng.random() < np.exp(-delta / max(temp, 1e-9)):
+            a[a1, b1] = a[b1, a1] = 0.0
+            a[c1, d1] = a[d1, c1] = 0.0
+            a[a1, d1] = a[d1, a1] = 1.0
+            a[c1, b1] = a[b1, c1] = 1.0
+            edges[e1] = (min(a1, d1), max(a1, d1))
+            edges[e2] = (min(c1, b1), max(c1, b1))
+            s1 = s1_new
+        temp *= cooling
+        if abs(r_of(s1) - target) < 5e-3 and temp < t0 / 10:
+            break
+    g = Graph(a.astype(np.float32), name=f"{graph.name}-rho{target:g}")
+    return g

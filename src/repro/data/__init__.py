@@ -1,0 +1,11 @@
+"""Synthetic datasets, FL partitioning and batching."""
+from .partition import node_datasets, partition_iid, partition_zipf
+from .pipeline import NodeBatches, node_batch_iterator, token_batch_iterator
+from .synthetic import (
+    ImageDataset,
+    cifar10_like,
+    make_image_classification,
+    make_token_stream,
+    mnist_like,
+    so2sat_like,
+)

@@ -1,0 +1,73 @@
+"""Partitioning the global dataset across FL nodes (paper §3, Appendix A).
+
+The paper uses iid and non-iid (Zipf, α=1.8) label distributions, with
+disjoint local datasets D_i, D_i ∩ D_j = ∅, and (on expectation) equal items
+per node — which is what justifies β_i ≈ 1/(k_i+1) in Eq. 2.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .synthetic import ImageDataset
+
+__all__ = ["partition_iid", "partition_zipf", "node_datasets"]
+
+
+def partition_iid(n_samples: int, n_nodes: int, seed: int = 0) -> list[np.ndarray]:
+    """Disjoint uniform split: every node gets n_samples // n_nodes indices."""
+    rng = np.random.default_rng(seed)
+    per = n_samples // n_nodes
+    perm = rng.permutation(n_samples)[: per * n_nodes]
+    return [perm[i * per : (i + 1) * per].astype(np.int64) for i in range(n_nodes)]
+
+
+def partition_zipf(
+    labels: np.ndarray, n_nodes: int, alpha: float = 1.8, items_per_node: int | None = None, seed: int = 0
+) -> list[np.ndarray]:
+    """Non-iid split: node i draws labels with a Zipf(α) preference over a
+    node-specific class ranking (paper cfg. B: Zipf α=1.8).
+
+    Every node ends up with the same number of items (equal |D_i|, as §3
+    assumes), but with skewed class proportions: each node's most-preferred
+    class dominates with weight ∝ rank^-α.
+    """
+    rng = np.random.default_rng(seed)
+    labels = np.asarray(labels)
+    n_classes = int(labels.max()) + 1
+    n_samples = len(labels)
+    per = items_per_node if items_per_node is not None else n_samples // n_nodes
+
+    by_class = [list(rng.permutation(np.nonzero(labels == c)[0])) for c in range(n_classes)]
+    ranks = np.arange(1, n_classes + 1, dtype=np.float64)
+    zipf_w = ranks ** (-alpha)
+    zipf_w /= zipf_w.sum()
+
+    out: list[np.ndarray] = []
+    for i in range(n_nodes):
+        pref = rng.permutation(n_classes)  # node-specific class ranking
+        w = np.empty(n_classes)
+        w[pref] = zipf_w
+        chosen: list[int] = []
+        # draw class for each item; fall back to the least-depleted class
+        cls_draws = rng.choice(n_classes, size=per, p=w)
+        for c in cls_draws:
+            if not by_class[c]:
+                avail = [k for k in range(n_classes) if by_class[k]]
+                if not avail:
+                    break
+                c = max(avail, key=lambda k: len(by_class[k]))
+            chosen.append(by_class[c].pop())
+        out.append(np.asarray(chosen, dtype=np.int64))
+    return out
+
+
+def node_datasets(ds: ImageDataset, parts: list[np.ndarray]) -> tuple[np.ndarray, np.ndarray]:
+    """Stack per-node partitions into (n_nodes, per_node, ...) arrays.
+
+    Truncates to the minimum partition size so the stack is rectangular —
+    the vectorised-ensemble trainer wants node-major dense arrays.
+    """
+    per = min(len(p) for p in parts)
+    xs = np.stack([ds.x[p[:per]] for p in parts])
+    ys = np.stack([ds.y[p[:per]] for p in parts])
+    return xs, ys

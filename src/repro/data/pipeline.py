@@ -1,0 +1,64 @@
+"""Batching pipeline for the vectorised node ensemble.
+
+All nodes step in lock-step (one communication round = ``b`` local
+minibatches, Appendix A: minibatch 16, b = 8), so the natural batch layout is
+node-major: ``(n_nodes, batch, ...)``.  The iterator is a deterministic,
+seeded, infinitely-repeating shuffle per node — a faithful stand-in for each
+device's local data loader.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["NodeBatches", "node_batch_iterator", "token_batch_iterator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeBatches:
+    x: np.ndarray  # (n_nodes, batch, ...)
+    y: np.ndarray  # (n_nodes, batch)
+
+
+def node_batch_iterator(
+    xs: np.ndarray, ys: np.ndarray, batch_size: int, seed: int = 0
+) -> Iterator[NodeBatches]:
+    """Infinite iterator of per-node minibatches with per-node shuffling."""
+    n_nodes, per_node = ys.shape[:2]
+    rng = np.random.default_rng(seed)
+    orders = np.stack([rng.permutation(per_node) for _ in range(n_nodes)])
+    cursors = np.zeros(n_nodes, dtype=np.int64)
+    while True:
+        bx = np.empty((n_nodes, batch_size) + xs.shape[2:], dtype=xs.dtype)
+        by = np.empty((n_nodes, batch_size), dtype=ys.dtype)
+        for i in range(n_nodes):
+            take = orders[i][cursors[i] : cursors[i] + batch_size]
+            if len(take) < batch_size:  # epoch boundary: reshuffle
+                orders[i] = rng.permutation(per_node)
+                cursors[i] = 0
+                take = orders[i][:batch_size]
+            bx[i] = xs[i, take]
+            by[i] = ys[i, take]
+            cursors[i] += batch_size
+        yield NodeBatches(x=bx, y=by)
+
+
+def token_batch_iterator(
+    tokens_per_node: np.ndarray, batch_size: int, seq_len: int, seed: int = 0
+) -> Iterator[NodeBatches]:
+    """LM batches: x = tokens[t:t+L], y = tokens[t+1:t+L+1], per node."""
+    n_nodes, stream_len = tokens_per_node.shape
+    rng = np.random.default_rng(seed)
+    max_start = stream_len - seq_len - 1
+    while True:
+        starts = rng.integers(0, max_start, size=(n_nodes, batch_size))
+        x = np.empty((n_nodes, batch_size, seq_len), dtype=np.int32)
+        y = np.empty((n_nodes, batch_size, seq_len), dtype=np.int32)
+        for i in range(n_nodes):
+            for b in range(batch_size):
+                s = starts[i, b]
+                x[i, b] = tokens_per_node[i, s : s + seq_len]
+                y[i, b] = tokens_per_node[i, s + 1 : s + seq_len + 1]
+        yield NodeBatches(x=x, y=y)

@@ -1,0 +1,90 @@
+"""Serving the consensus model (post-DFL deployment artifact).
+
+After decentralised training converges, every node's parameters agree up to
+the noise floor (σ_an → σ_noise, §4.2); the deployable model is the DecAvg
+consensus — ``consensus_params`` below — served with standard
+prefill + batched autoregressive decode.  These are the functions the
+``prefill_32k`` / ``decode_32k`` / ``long_500k`` input shapes lower.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+
+PyTree = Any
+
+__all__ = ["consensus_params", "prefill", "decode_one", "generate"]
+
+
+def consensus_params(node_params: PyTree, weights: jax.Array | None = None) -> PyTree:
+    """Average the node ensemble into one deployable parameter set."""
+
+    def avg(leaf):
+        lf = leaf.astype(jnp.float32)
+        if weights is None:
+            out = lf.mean(axis=0)
+        else:
+            w = weights / weights.sum()
+            out = jnp.tensordot(w, lf, axes=1)
+        return out.astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(avg, node_params)
+
+
+def prefill(
+    params: PyTree, cfg: ArchConfig, tokens: jax.Array, frontend_embeds: jax.Array | None = None
+) -> jax.Array:
+    """Full-sequence forward → next-token logits for the LAST position only
+    ((B, V)); full logits never materialise (vocab can be 262k)."""
+    hidden, _ = tf.forward(params, cfg, tokens, frontend_embeds, remat=False)
+    return tf.hidden_to_logits(params, cfg, hidden[..., -1:, :])[..., 0, :]
+
+
+def decode_one(
+    params: PyTree, cfg: ArchConfig, cache: PyTree, tokens: jax.Array, pos: jax.Array
+) -> tuple[jax.Array, PyTree]:
+    """ONE new token against a cache of ``cache_len`` — the decode_32k /
+    long_500k step. tokens (B, 1), pos scalar absolute position."""
+    return tf.decode_step(params, cfg, cache, tokens, pos)
+
+
+def generate(
+    params: PyTree,
+    cfg: ArchConfig,
+    prompt: jax.Array,
+    n_new: int,
+    cache_len: int,
+    temperature: float = 0.0,
+    rng: jax.Array | None = None,
+) -> jax.Array:
+    """Greedy/temperature sampling driver (example + integration tests).
+
+    Prompt is consumed token-by-token through the decode path (simple and
+    exact); production prefill would batch it — see ``prefill``.
+    """
+    b = prompt.shape[0]
+    cache = tf.init_cache(cfg, (b,), cache_len)
+    out = []
+    step = jax.jit(tf.decode_step, static_argnums=(1,))
+    pos = 0
+    for t in range(prompt.shape[1] - 1):
+        _, cache = step(params, cfg, cache, prompt[:, t : t + 1], jnp.asarray(pos))
+        pos += 1
+    tok = prompt[:, -1:]
+    key = rng if rng is not None else jax.random.PRNGKey(0)
+    for _ in range(n_new):
+        logits, cache = step(params, cfg, cache, tok, jnp.asarray(pos))
+        pos += 1
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits[:, -1] / temperature)[:, None]
+        else:
+            tok = logits[:, -1].argmax(-1)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each subpackage: <name>.py (pl.pallas_call + BlockSpec tiling), ops.py
+(jit'd public wrapper), ref.py (pure-jnp oracle).  All validated with
+interpret=True on CPU; TPU is the target (DESIGN.md §9).
+"""
+from .flash import attention_ref, flash_attention
+from .mix import decavg_mix, decavg_mix_ref
+from .rwkv import rwkv6_attention, rwkv6_ref

@@ -1,0 +1,147 @@
+"""Pallas TPU flash attention (online softmax), GQA + sliding-window aware.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — kv innermost so the running
+max/denominator/accumulator scratch carries across kv steps of one q tile.
+Blocks: q 128 × kv 128 × head_dim — MXU-aligned; K/V tiles are indexed to
+the GQA group's kv head (q head h reads kv head h // group).
+
+Sliding-window layers (gemma3 locals, SWA variants) mask per element AND
+skip fully-out-of-range kv blocks with ``pl.when`` — the early-exit that
+makes local attention O(S·window) instead of O(S²).
+
+fp32 softmax state; output flushed once at the last kv block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_mha"]
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, causal, window, block_q, block_k, seq_len
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (block_q, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (block_k, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (block_q, block_k)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window > 0:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    # block-level early exit: skip kv tiles entirely above the causal
+    # diagonal or entirely left of the sliding window
+    if causal or window > 0:
+        needed = k_start <= q_start + block_q - 1 if causal else k_start == k_start
+        if window > 0:
+            needed = needed & (k_start + block_k - 1 > q_start - window)
+        pl.when(needed)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """q (B, H, S, hd); k/v (B, KVH, S, hd); H % KVH == 0 → (B, H, S, hd)."""
+    b, h, s, hd = q.shape
+    kvh = k.shape[1]
+    assert h % kvh == 0, (h, kvh)
+    group = h // kvh
+    scale = 1.0 / (hd**0.5)
+
+    bq = min(block_q, pl.next_power_of_2(s))
+    bk = min(block_k, pl.next_power_of_2(s))
+    pad = -s % max(bq, bk)
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        qp, kp, vp = q, k, v
+    sp = s + pad
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=bq,
+        block_k=bk,
+        seq_len=s,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, sp // bq, sp // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :s, :]

@@ -1,0 +1,30 @@
+"""Jit'd public wrapper: layout adaptation for the flash attention kernel.
+
+The model zoo keeps activations (B, S, H, hd); the kernel wants (B, H, S, hd)
+(sequence minor-most-but-one so q/kv tiles are contiguous VMEM loads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash import flash_mha
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    """q (B, S, H, hd); k/v (B, S, KVH, hd) → (B, S, H, hd)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_mha(qt, kt, vt, causal=causal, window=window, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (mirrors models/attention math)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True, window: int = 0
+) -> jax.Array:
+    """q (B, H, S, hd); k/v (B, KVH, S, hd) → (B, H, S, hd). fp32 softmax."""
+    b, h, s, hd = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, s, hd)
+    scores = jnp.einsum("bngsd,bntd->bngst", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / (hd**0.5)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = mask & (j <= i)
+    if window > 0:
+        mask = mask & (j > i - window)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,bntd->bngsd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, s, hd).astype(q.dtype)

@@ -1,0 +1,2 @@
+from .ops import decavg_mix
+from .ref import decavg_mix_ref

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for the DecAvg mixing product  Y = M · W.
+
+W is the node-stacked flattened parameter matrix (n, d) — d is the per-shard
+parameter count, typically 10⁶–10⁹/16 — and M is the (n, n) row-stochastic
+receive operator (Eq. 2).  On the production mesh the node axis is sharded
+over ``data``; after the all-gather (or the circulant ppermute schedule)
+each chip runs this kernel over its d-shard.
+
+TPU tiling (DESIGN.md §9): n is small (16–4096) and d huge, so the grid
+walks (n-row tiles × d tiles) with a K-loop over n-column tiles innermost.
+M tiles live in VMEM (block_n² fp32 ≤ 256 KB), W tiles are (block_n,
+block_d) = (128, 512) → 256 KB bf16, and the accumulator is an fp32 VMEM
+scratch — everything MXU-aligned at multiples of 128 (lane) / 8 (sublane).
+fp32 accumulation is mandatory here: the mixing weights are O(1/k) and the
+post-diffusion parameter scale is σ_init·‖v_steady‖ (§4.3) — exactly the
+signal bf16 accumulation would truncate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mix_matmul"]
+
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_D = 512
+
+
+def _mix_kernel(m_ref, w_ref, o_ref, acc_ref):
+    """One (i, j, k) grid step: acc[i, j] += M[i, k] @ W[k, j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        m_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def mix_matmul(
+    m: jax.Array,
+    w: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y = M @ W with M (n, n) mixing weights, W (n, d) node-major params.
+
+    Pads n up to the row-tile and d up to the lane tile; the padding rows of
+    M are zero so padded outputs are zero and sliced away.
+    """
+    n, d = w.shape
+    assert m.shape == (n, n), (m.shape, w.shape)
+    bn = min(block_n, pl.next_power_of_2(n))
+    bd = min(block_d, pl.next_power_of_2(d))
+    n_pad = -n % bn
+    d_pad = -d % bd
+    mp = jnp.pad(m, ((0, n_pad), (0, n_pad)))
+    wp = jnp.pad(w, ((0, n_pad), (0, d_pad)))
+    np_, dp_ = n + n_pad, d + d_pad
+
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(np_ // bn, dp_ // bd, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bn, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bd), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, dp_), w.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, bd), jnp.float32)],
+        interpret=interpret,
+    )(mp, wp)
+    return out[:n, :d]

@@ -1,0 +1,44 @@
+"""Jit'd public wrapper for the DecAvg mixing kernel.
+
+``decavg_mix(m, tree)`` mixes a whole node-stacked parameter pytree: leaves
+are flattened per node, concatenated, pushed through the blocked kernel and
+split back — one big MXU-friendly (n, d_total) product instead of hundreds
+of skinny ones.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .mix import mix_matmul
+
+PyTree = Any
+
+__all__ = ["decavg_mix"]
+
+
+def decavg_mix(m: jax.Array, params: PyTree, *, interpret: bool = False) -> PyTree:
+    """Apply ``w_new[i] = Σ_j M[i,j] w[j]`` to every leaf of a node-stacked
+    pytree via the Pallas kernel.  Leaves must share the leading node dim."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    import math
+
+    n = leaves[0].shape[0]
+    shapes = [l.shape for l in leaves]
+    sizes = [math.prod(s[1:]) for s in shapes]
+    # group by dtype so concatenation is valid; mix each group
+    out_leaves: list = [None] * len(leaves)
+    by_dtype: dict = {}
+    for idx, l in enumerate(leaves):
+        by_dtype.setdefault(l.dtype, []).append(idx)
+    for dt, idxs in by_dtype.items():
+        flat = jnp.concatenate([leaves[i].reshape(n, -1) for i in idxs], axis=1)
+        mixed = mix_matmul(m.astype(jnp.float32), flat, interpret=interpret)
+        off = 0
+        for i in idxs:
+            sz = sizes[i]
+            out_leaves[i] = mixed[:, off : off + sz].reshape(shapes[i])
+            off += sz
+    return jax.tree_util.tree_unflatten(treedef, out_leaves)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the DecAvg mixing kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decavg_mix_ref"]
+
+
+def decavg_mix_ref(m: jax.Array, w: jax.Array) -> jax.Array:
+    """Y = M @ W with fp32 accumulation, cast back to w.dtype."""
+    out = jnp.einsum(
+        "ij,jd->id",
+        m.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(w.dtype)

@@ -1,0 +1,2 @@
+from .ops import rwkv6_attention
+from .ref import rwkv6_ref

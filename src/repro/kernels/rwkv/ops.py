@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for the RWKV-6 time-mix kernel.
+
+Accepts the model-zoo layout (..., L, H, M) and flattens (leading, H) into
+the kernel's BH grid axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .rwkv import rwkv6_chunked
+
+__all__ = ["rwkv6_attention"]
+
+
+def rwkv6_attention(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """r/k/v/w (..., L, H, M); u (H, M) → (..., L, H, M)."""
+    *lead, l, h, m = r.shape
+    fold = lambda t: jnp.moveaxis(t, -2, -3).reshape(-1, l, m)
+    rr, kk, vv, ww = fold(r), fold(k), fold(v), fold(w)
+    bh = rr.shape[0]
+    b = bh // h
+    uu = jnp.tile(u, (b, 1))
+    out = rwkv6_chunked(rr, kk, vv, ww, uu, interpret=interpret)
+    out = out.reshape(tuple(lead) + (h, l, m))
+    return jnp.moveaxis(out, -3, -2)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: naive per-token RWKV-6 recurrence via lax.scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rwkv6_ref"]
+
+
+def rwkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array) -> jax.Array:
+    """r/k/v/w (BH, L, M), u (BH, M) → out (BH, L, M); fp32 state."""
+    bh, l, m = r.shape
+    r32, k32, v32, w32 = (jnp.moveaxis(t, 1, 0).astype(jnp.float32) for t in (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]  # (BH, M, M)
+        out = jnp.einsum("bm,bmn->bn", rt, state + u32[..., :, None] * kv)
+        state = state * wt[..., :, None] + kv
+        return state, out
+
+    state0 = jnp.zeros((bh, m, m), jnp.float32)
+    _, outs = jax.lax.scan(step, state0, (r32, k32, v32, w32))
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype)

@@ -1,0 +1,8 @@
+"""Launcher layer: production mesh, sharding rules, step builders, dry-run,
+roofline derivation, training/serving CLIs.
+
+NOTE: ``dryrun`` is intentionally NOT imported here — it sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` at import time and
+must only be loaded as the entry point of a dedicated process.
+"""
+from . import mesh, roofline, shardings, steps

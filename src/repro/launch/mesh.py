@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Target hardware: TPU v5e pods — 256 chips/pod as a (data=16, model=16) mesh,
+two pods as (pod=2, data=16, model=16).  FL nodes map to the ``data`` axis
+(one 16-chip model-parallel slice per node; 32 nodes multi-pod), tensor
+parallelism to ``model`` (DESIGN.md §2).
+
+NOTE: functions, not module constants — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS *before* jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "node_axis", "N_CHIPS"]
+
+N_CHIPS = {"single": 256, "multi": 512}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def node_axis(*, multi_pod: bool = False):
+    """The mesh axis (or axes) the FL node dimension shards over."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def n_fl_nodes(*, multi_pod: bool = False) -> int:
+    return 32 if multi_pod else 16

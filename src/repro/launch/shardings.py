@@ -1,0 +1,213 @@
+"""PartitionSpec assignment for every parameter / state / input tensor.
+
+Rules are path + shape driven (GSPMD-style sharding config, DESIGN.md §8):
+
+* FL node axis            → ``data`` (train shapes) or ``("pod","data")``
+* tensor parallelism      → ``model``: attention heads (fallback: head_dim
+                            when the head count doesn't divide the axis —
+                            qwen1.5's 20H, llama4's 40H), FFN hidden dim,
+                            MoE expert dim, vocab (fallback: d_model when
+                            vocab doesn't divide — granite's 49155)
+* period-stacked layers   → extra leading None (the ``stack`` lists)
+* structured scalars      → replicated
+
+Divisibility is checked per tensor: any dim not divisible by the axis size
+falls back to replication rather than failing to lower.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+
+__all__ = ["param_pspecs", "with_node_axis", "cache_pspecs", "shardings_for"]
+
+_MODEL = "model"
+
+
+def _div(n: int, size: int) -> bool:
+    return n % size == 0
+
+
+def _leaf_spec(path: tuple, shape: tuple[int, ...], msize: int, replicate_attn: str = "auto") -> P:
+    """Logical trailing-dims spec (no node/period prefixes yet)."""
+    names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+    names = [str(n) for n in names]
+    leaf = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    gparent = names[-3] if len(names) >= 3 else ""
+    rank = len(shape)
+
+    # §Perf variants (cfg.attn_weight_sharding):
+    #   "replicate": all attention weights replicated
+    #   "qkv_split": K/V projections replicated (they're small for GQA and
+    #       their hd-sharding forces (S, S)-score all-reduces), Q/O sharded
+    if replicate_attn == "replicate" and "attn" in names:
+        return P(*([None] * rank))
+    if replicate_attn == "qkv_split" and "attn" in names and parent in ("wk", "wv"):
+        return P(*([None] * rank))
+
+    def last2(d0, d1):
+        """Spec for the last two dims, padded with Nones on the left."""
+        return P(*([None] * (rank - 2)), d0, d1)
+
+    def last1(d0):
+        return P(*([None] * (rank - 1)), d0)
+
+    # ---- embeddings / head -------------------------------------------
+    if parent == "tok":  # (V, D)
+        v, d = shape[-2], shape[-1]
+        if _div(v, msize):
+            return last2(_MODEL, None)
+        return last2(None, _MODEL) if _div(d, msize) else last2(None, None)
+    if gparent == "lm_head" or parent == "lm_head":  # (D, V)
+        d, v = shape[-2], shape[-1]
+        if _div(v, msize):
+            return last2(None, _MODEL)
+        return last2(_MODEL, None) if _div(d, msize) else last2(None, None)
+
+    # ---- biases / vectors --------------------------------------------
+    if leaf == "b" or rank - _n_prefix_dims(names) <= 1:
+        d = shape[-1]
+        # bias of an output-sharded projection shards with it
+        if parent in ("wq", "wk", "wv", "wg", "wr", "w_in", "w_gate", "in_proj", "dt_proj", "wk_c") and _div(d, msize):
+            return last1(_MODEL)
+        if leaf in ("conv_b", "dt_bias", "d_skip") and _div(d, msize):
+            return last1(_MODEL)
+        return P(*([None] * rank))
+
+    # ---- MoE expert stacks (E, D, F) / (E, F, D) ----------------------
+    if gparent == "ffn" and rank >= 3 and parent in ("w_in", "w_gate", "w_out"):
+        e = shape[-3]
+        if _div(e, msize):
+            return P(*([None] * (rank - 3)), _MODEL, None, None)
+        f_dim = -1 if parent in ("w_in", "w_gate") else -2
+        if _div(shape[f_dim], msize):
+            spec = [None, None, None]
+            spec[3 + f_dim] = _MODEL
+            return P(*([None] * (rank - 3)), *spec)
+        return P(*([None] * rank))
+    if parent == "router":
+        return P(*([None] * rank))
+
+    # ---- dense 2-D weights -------------------------------------------
+    out_sharded = {"wq", "wk", "wv", "wg", "w_in", "w_gate", "in_proj", "dt_proj", "decay_lora_a"}
+    in_sharded = {"wo", "w_out", "x_proj", "out_proj", "decay_lora_b"}
+    if gparent == "cmix" and parent == "wv":  # rwkv channel-mix wv is (F, D)
+        return last2(_MODEL, None) if _div(shape[-2], msize) else last2(None, None)
+    if parent in out_sharded or leaf in ("conv_w",):
+        return last2(None, _MODEL) if _div(shape[-1], msize) else last2(None, None)
+    if parent in in_sharded:
+        return last2(_MODEL, None) if _div(shape[-2], msize) else last2(None, None)
+    if parent == "wr":  # rwkv receptance: output-sharded
+        return last2(None, _MODEL) if _div(shape[-1], msize) else last2(None, None)
+    if leaf == "a_log":  # (di, N)
+        return last2(_MODEL, None) if _div(shape[-2], msize) else last2(None, None)
+    if parent == "frontend_proj" or gparent == "frontend_proj":
+        if rank >= 2 and _div(shape[-1], msize):
+            return last2(None, _MODEL)
+        return P(*([None] * rank))
+
+    # ---- everything else (norm scales, mixes, decay bases, bonus) ----
+    return P(*([None] * rank))
+
+
+def _n_prefix_dims(names: list[str]) -> int:
+    """Number of structural leading dims: 1 if under a period-stacked list."""
+    return 1 if "stack" in names else 0
+
+
+def param_pspecs(params: PyTree, cfg: ArchConfig, mesh) -> PyTree:
+    """PartitionSpec tree matching ``params`` (consensus / per-node layout)."""
+    msize = int(np.prod([mesh.shape[a] for a in mesh.axis_names if a == _MODEL]))
+    replicate_attn = getattr(cfg, "attn_weight_sharding", "auto")
+
+    def spec_of(path, leaf):
+        s = _leaf_spec(path, leaf.shape, msize, replicate_attn=replicate_attn)
+        pad = leaf.ndim - len(s)
+        if pad:
+            s = P(*([None] * pad), *s)
+        return s
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def with_node_axis(specs: PyTree, node_ax) -> PyTree:
+    """Prepend the FL node axis to every spec (training layout)."""
+    ax = tuple(node_ax) if isinstance(node_ax, (tuple, list)) else (node_ax,)
+    ax = ax if len(ax) > 1 else ax[0]
+
+    def add(s: P) -> P:
+        return P(ax, *tuple(s))
+
+    return jax.tree_util.tree_map(add, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_pspecs(cache: PyTree, cfg: ArchConfig, mesh, *, batch_axis: str | None, seq_axis: str | None) -> PyTree:
+    """KV/state cache specs.
+
+    decode_32k: batch over ``data``; long_500k (batch=1): the *sequence* dim
+    of attention caches shards over ``data`` instead; SSM/conv states shard
+    their feature dim over ``model`` when divisible.
+    """
+    msize = mesh.shape[_MODEL]
+
+    def spec_of(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+        leafname = names[-1]
+        rank = leaf.ndim
+        stacked = 1 if "stack" in names else 0
+        body = [None] * (rank - stacked)
+        # body dims by cache kind:
+        if leafname in ("k", "v"):  # (B, T, KVH, hd)
+            if batch_axis and leaf.shape[stacked + 0] % _axsize(mesh, batch_axis) == 0:
+                body[0] = batch_axis if "+" not in batch_axis else tuple(batch_axis.split("+"))
+            elif seq_axis and leaf.shape[stacked + 1] % _axsize(mesh, seq_axis) == 0:
+                body[1] = seq_axis if "+" not in seq_axis else tuple(seq_axis.split("+"))
+            # KV heads shard over model ONLY when they fill the axis (MHA);
+            # GQA kv-heads < axis size stay replicated (Megatron-style) —
+            # anything else fights the q-aligned (kvh ⊗ group) einsum
+            # sharding and triggers involuntary full rematerialisation.
+            if leaf.shape[stacked + 2] % msize == 0:
+                body[2] = _MODEL
+        elif leafname == "conv":  # (B, dc-1, di)
+            if batch_axis and leaf.shape[stacked + 0] % _axsize(mesh, batch_axis) == 0:
+                body[0] = batch_axis if "+" not in batch_axis else tuple(batch_axis.split("+"))
+            if leaf.shape[stacked + 2] % msize == 0:
+                body[2] = _MODEL
+        elif leafname == "ssm":  # (B, di, N)
+            if batch_axis and leaf.shape[stacked + 0] % _axsize(mesh, batch_axis) == 0:
+                body[0] = batch_axis if "+" not in batch_axis else tuple(batch_axis.split("+"))
+            if leaf.shape[stacked + 1] % msize == 0:
+                body[1] = _MODEL
+        elif leafname in ("tshift", "cshift"):  # (B, 1, D)
+            if batch_axis and leaf.shape[stacked + 0] % _axsize(mesh, batch_axis) == 0:
+                body[0] = batch_axis if "+" not in batch_axis else tuple(batch_axis.split("+"))
+            if leaf.shape[stacked + 2] % msize == 0:
+                body[2] = _MODEL
+        elif leafname == "state":  # (B, H, M, M)
+            if batch_axis and leaf.shape[stacked + 0] % _axsize(mesh, batch_axis) == 0:
+                body[0] = batch_axis if "+" not in batch_axis else tuple(batch_axis.split("+"))
+            elif leaf.shape[stacked + 1] % msize == 0:
+                body[1] = _MODEL
+        return P(*([None] * stacked), *body)
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache)
+
+
+def _axsize(mesh, axis: str) -> int:
+    if "+" in axis:
+        return int(np.prod([mesh.shape[a] for a in axis.split("+")]))
+    return mesh.shape[axis]
+
+
+def shardings_for(specs: PyTree, mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )

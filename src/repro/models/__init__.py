@@ -1,0 +1,4 @@
+"""Model zoo: unified decoder stack for the 10 assigned architectures +
+the paper's own MLP/CNN/VGG16."""
+from . import attention, common, mamba, mlp, moe, paper_models, rwkv, transformer
+from .transformer import decode_step, forward, hidden_to_logits, init_cache, init_params, lm_loss

@@ -1,0 +1,223 @@
+"""Grouped-query attention with RoPE, sliding-window option and KV cache.
+
+The XLA einsum path below is the lowering used for dry-runs and CPU smoke
+tests; ``repro.kernels.flash`` is the TPU Pallas rendering of the same math
+(validated against ``repro.kernels.flash.ref`` which mirrors this module).
+
+Shapes (node/batch axes lead and broadcast):
+    x          (..., S, D)
+    wq         (D, H, hd)        wk/wv (D, KVH, hd)       wo (H, hd, D)
+    cache k/v  (..., S_cache, KVH, hd)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.initialisation import InitConfig
+from .common import KeyGen, apply_rope, dense_init
+
+PyTree = Any
+
+__all__ = ["init_attention", "attention_forward", "attention_decode", "init_kv_cache"]
+
+
+def init_attention(init_cfg: InitConfig, key: jax.Array, cfg: ArchConfig) -> PyTree:
+    kg = KeyGen(key)
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.param_dtype
+    p = {
+        "wq": dense_init(init_cfg, kg(), (d, h * hd), dt, bias=cfg.qkv_bias),
+        "wk": dense_init(init_cfg, kg(), (d, kvh * hd), dt, bias=cfg.qkv_bias),
+        "wv": dense_init(init_cfg, kg(), (d, kvh * hd), dt, bias=cfg.qkv_bias),
+        "wo": dense_init(init_cfg, kg(), (h * hd, d), dt, bias=False),
+    }
+    return p
+
+
+def _project(p: PyTree, x: jax.Array, n_heads: int, hd: int) -> jax.Array:
+    y = jnp.einsum("...sd,df->...sf", x, p["w"])
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y.reshape(y.shape[:-1] + (n_heads, hd))
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array, scale: float) -> jax.Array:
+    """q (...,S,H,hd), k/v (...,T,KVH,hd) -> (...,S,H,hd); GQA via head groups.
+
+    fp32 softmax; mask is additive-bool (True = attend).
+    """
+    h = q.shape[-2]
+    kvh = k.shape[-2]
+    group = h // kvh
+    qg = q.reshape(q.shape[:-2] + (kvh, group, q.shape[-1]))
+    scores = jnp.einsum("...sngd,...tnd->...ngst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask[..., None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("...ngst,...tnd->...sngd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(out.shape[:-3] + (h, out.shape[-1])).astype(q.dtype)
+
+
+def _causal_mask(s: int, window: int = 0) -> jax.Array:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window > 0:
+        m = m & (j > i - window)
+    return m
+
+
+def attention_forward(
+    p: PyTree, cfg: ArchConfig, x: jax.Array, positions: jax.Array, window: int = 0
+) -> jax.Array:
+    """Full-sequence (training / prefill) attention; causal, optionally SWA.
+
+    Implementation selected by the §Perf config knobs:
+      * window > 0 and swa_impl == "blocked" and S a multiple of the window →
+        band attention over [prev, self] window blocks (O(S·2w)),
+      * attn_impl == "chunked" → flash-style q-chunked online softmax
+        (O(c·S) live score memory),
+      * otherwise the baseline (S, S) masked softmax.
+    """
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    s = x.shape[-2]
+    q = _project(p["wq"], x, h, hd)
+    k = _project(p["wk"], x, kvh, hd)
+    v = _project(p["wv"], x, kvh, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / (hd**0.5)
+    if window > 0 and cfg.swa_impl == "blocked" and s % window == 0 and s > window:
+        out = _sdpa_banded(q, k, v, window, scale)
+    elif cfg.attn_impl == "chunked" and s >= 512:
+        out = _sdpa_chunked(q, k, v, window, scale, unroll=cfg.unroll_scans)
+    else:
+        mask = _causal_mask(s, window)
+        out = _sdpa(q, k, v, mask, scale)
+    out = out.reshape(out.shape[:-2] + (h * hd,))
+    return jnp.einsum("...sf,fd->...sd", out, p["wo"]["w"])
+
+
+def _sdpa_banded(q: jax.Array, k: jax.Array, v: jax.Array, window: int, scale: float) -> jax.Array:
+    """Band attention for sliding-window layers (beyond-paper §Perf).
+
+    Block the sequence into S/w blocks of the window size w; every query in
+    block b can only see keys in blocks {b-1, b} (any key within w of a
+    causal query lies there).  Scores are (nb, w, 2w) — compute and live
+    memory O(S·2w) instead of O(S²).
+    """
+    lead = q.shape[:-3]
+    s, h, hd = q.shape[-3], q.shape[-2], q.shape[-1]
+    kvh = k.shape[-2]
+    w = window
+    nb = s // w
+    qb = q.reshape(lead + (nb, w, h, hd))
+    kb = k.reshape(lead + (nb, w, kvh, hd))
+    vb = v.reshape(lead + (nb, w, kvh, hd))
+    # prev-block keys: shift right by one block, zero-pad block 0
+    pad = [(0, 0)] * len(lead) + [(1, 0), (0, 0), (0, 0), (0, 0)]
+    kprev = jnp.pad(kb, pad)[..., :-1, :, :, :]
+    vprev = jnp.pad(vb, pad)[..., :-1, :, :, :]
+    k2 = jnp.concatenate([kprev, kb], axis=-3)  # (..., nb, 2w, KVH, hd)
+    v2 = jnp.concatenate([vprev, vb], axis=-3)
+    # relative mask within a block pair: query index i (0..w-1, absolute
+    # b·w + i) vs key index j (0..2w-1, absolute (b-1)·w + j)
+    i = jnp.arange(w)[:, None]
+    j = jnp.arange(2 * w)[None, :]
+    rel = (i + w) - j  # (absolute query) - (absolute key)
+    mask = (rel >= 0) & (rel < w)  # causal ∧ within window
+    # block 0 has no prev block: mask out the padded keys
+    mask0 = mask & (j >= w)
+    masks = jnp.where(jnp.arange(nb)[:, None, None] == 0, mask0[None], mask[None])
+    out = _sdpa(qb, k2, v2, masks, scale)  # broadcasting over nb
+    return out.reshape(lead + (s, h, hd))
+
+
+def _sdpa_chunked(
+    q: jax.Array, k: jax.Array, v: jax.Array, window: int, scale: float, chunk: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """Flash-style q-chunked attention in pure XLA (beyond-paper §Perf).
+
+    Processes q in chunks of ``chunk`` against the full K/V with the exact
+    (non-online) softmax per chunk — live score memory is (chunk, S) per
+    step instead of (S, S).  ``unroll`` mirrors cfg.unroll_scans for honest
+    roofline op counts.
+    """
+    lead = q.shape[:-3]
+    s, h, hd = q.shape[-3], q.shape[-2], q.shape[-1]
+    kvh = k.shape[-2]
+    c = min(chunk, s)
+    nc = -(-s // c)
+    pad = nc * c - s
+    qp = jnp.pad(q, [(0, 0)] * len(lead) + [(0, pad), (0, 0), (0, 0)]) if pad else q
+    qc = jnp.moveaxis(qp.reshape(lead + (nc, c, h, hd)), -4, 0)  # (nc, ..., c, h, hd)
+
+    jpos = jnp.arange(s)[None, :]
+
+    def one(ci, qchunk):
+        ipos = ci * c + jnp.arange(c)[:, None]
+        mask = jpos <= ipos
+        if window > 0:
+            mask = mask & (jpos > ipos - window)
+        return _sdpa(qchunk, k, v, mask, scale)
+
+    if unroll:
+        outs = jnp.stack([one(ci, qc[ci]) for ci in range(nc)])
+    else:
+        outs = jax.lax.map(lambda t: one(t[0], t[1]), (jnp.arange(nc), qc))
+    out = jnp.moveaxis(outs, 0, -4).reshape(lead + (nc * c, h, hd))
+    return out[..., :s, :, :]
+
+
+def init_kv_cache(cfg: ArchConfig, batch_shape: tuple[int, ...], cache_len: int, dtype=None) -> PyTree:
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = dtype or cfg.param_dtype
+    shape = batch_shape + (cache_len, kvh, hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def attention_decode(
+    p: PyTree,
+    cfg: ArchConfig,
+    x: jax.Array,
+    cache: PyTree,
+    pos: jax.Array,
+    window: int = 0,
+) -> tuple[jax.Array, PyTree]:
+    """One-token decode: x (..., 1, D); cache k/v (..., T, KVH, hd); pos ().
+
+    The new K/V is written at ``pos % T`` — a plain slot write for full
+    caches (T = max context) and a *ring buffer* for sliding-window layers
+    (T = window), which is what keeps gemma3 local layers O(window) at 500k.
+    """
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    t = cache["k"].shape[-3]
+    q = _project(p["wq"], x, h, hd)
+    k_new = _project(p["wk"], x, kvh, hd)
+    v_new = _project(p["wv"], x, kvh, hd)
+    q = apply_rope(q, pos[None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[None], cfg.rope_theta)
+
+    slot = (pos % t).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=-3)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=-3)
+
+    # valid slots: absolute index of slot j is pos - ((slot - j) mod T)
+    j = jnp.arange(t)
+    age = jnp.mod(slot - j, t)  # 0 for the token just written
+    abs_idx = pos - age
+    valid = abs_idx >= 0
+    if window > 0:
+        valid = valid & (abs_idx > pos - window)
+    mask = valid[None, :]  # (S=1, T)
+
+    out = _sdpa(q, k, v, mask, 1.0 / (hd**0.5))
+    out = out.reshape(out.shape[:-2] + (h * hd,))
+    y = jnp.einsum("...sf,fd->...sd", out, p["wo"]["w"])
+    return y, {"k": k, "v": v}

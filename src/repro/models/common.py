@@ -1,0 +1,104 @@
+"""Shared building blocks for the model zoo.
+
+Everything is functional: ``init_*`` returns a params (nested-dict) pytree,
+``apply``-style functions are pure.  All random weight draws go through
+``repro.core.initialisation.scaled_init`` so the paper's ‖v_steady‖⁻¹ gain
+correction reaches every architecture uniformly (DESIGN.md §4).  Structured
+parameters (norm scales, biases, decay spectra) bypass the gain.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.initialisation import InitConfig, scaled_init
+
+PyTree = Any
+
+__all__ = [
+    "KeyGen",
+    "dense_init",
+    "norm_init",
+    "norm_apply",
+    "rope_freqs",
+    "apply_rope",
+    "ACTIVATIONS",
+]
+
+
+class KeyGen:
+    """Sequential PRNG splitter so init code reads linearly."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def dense_init(
+    init_cfg: InitConfig,
+    key: jax.Array,
+    shape: tuple[int, ...],
+    dtype=jnp.bfloat16,
+    bias: bool = False,
+) -> PyTree:
+    """A (gain-corrected) dense weight, optionally with a zero bias."""
+    p = {"w": scaled_init(init_cfg, key, shape, jnp.float32).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((shape[-1],), dtype)
+    return p
+
+
+def norm_init(d: int, kind: str, dtype=jnp.bfloat16) -> PyTree:
+    """RMSNorm (scale only) or LayerNorm (scale + bias); init is structured
+    (ones/zeros) and therefore *not* gain-corrected."""
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p: PyTree, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    raise ValueError(f"unknown norm kind {kind}")
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for rotary embeddings, (head_dim // 2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding.
+
+    x: (..., S, H, hd); positions: broadcastable to (..., S) absolute indices.
+    fp32 trig, cast back to x.dtype.
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv[None, :]  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}

@@ -1,0 +1,162 @@
+"""Mamba (selective SSM) block — the "mamba" entries of jamba's 1:7 interleave.
+
+TPU-native adaptation (DESIGN.md): the CUDA selective-scan kernel becomes a
+chunked ``lax.scan`` carrying the (d_inner, d_state) state across
+sequence chunks, with the intra-chunk recurrence done by
+``jax.lax.associative_scan`` — O(L·d_inner·d_state) work, chunk-bounded
+memory, and a single fused XLA while-loop.
+
+Recurrence (diagonal selective SSM):
+    h_t = exp(Δ_t A) ⊙ h_{t-1} + (Δ_t B_t) x_t          h ∈ R^{d_inner × N}
+    y_t = C_t · h_t + D ⊙ x_t
+with Δ_t = softplus(dt_proj(x)), (B_t, C_t, Δ_rank) read from x (selective).
+
+Structured params (A_log via S4D-real, conv kernel, dt bias, D) are NOT
+gain-corrected; dense projections are (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.initialisation import InitConfig
+from .common import KeyGen, dense_init
+
+PyTree = Any
+
+__all__ = ["init_mamba", "mamba_forward", "mamba_decode", "init_mamba_cache"]
+
+_CHUNK = 256
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return max(1, -(-cfg.d_model // 16))  # ceil(d_model / 16), mamba default
+
+
+def init_mamba(init_cfg: InitConfig, key: jax.Array, cfg: ArchConfig) -> PyTree:
+    kg = KeyGen(key)
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    r = _dt_rank(cfg)
+    dt = cfg.param_dtype
+    # S4D-real structured init for A, uniform dt bias in [1e-3, 1e-1] (mamba defaults)
+    a_log = jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)))
+    dt_init = jnp.exp(
+        jax.random.uniform(kg(), (di,), jnp.float32) * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)
+    )
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "in_proj": dense_init(init_cfg, kg(), (d, 2 * di), dt),
+        "conv_w": (jax.random.uniform(kg(), (dc, di), jnp.float32, -1, 1) / jnp.sqrt(dc)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(init_cfg, kg(), (di, r + 2 * n), dt),
+        "dt_proj": dense_init(init_cfg, kg(), (r, di), dt),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "a_log": a_log,  # fp32: decay spectra are precision-sensitive
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(init_cfg, kg(), (di, d), dt),
+    }
+
+
+def _ssm_params(p: PyTree, cfg: ArchConfig, xc: jax.Array):
+    """xc (..., L, di) → decay a (..., L, di, N), drive bx (..., L, di, N), c (..., L, N)."""
+    n = cfg.mamba_d_state
+    r = _dt_rank(cfg)
+    proj = jnp.einsum("...ld,de->...le", xc, p["x_proj"]["w"])
+    dt_r, b, c = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("...lr,rd->...ld", dt_r, p["dt_proj"]["w"]).astype(jnp.float32) + p["dt_bias"]
+    )  # (..., L, di)
+    a = -jnp.exp(p["a_log"])  # (di, N)
+    decay = jnp.exp(dt[..., None] * a)  # (..., L, di, N)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * b[..., None, :].astype(jnp.float32)
+    return decay, bx, c.astype(jnp.float32)
+
+
+def _conv1d(p: PyTree, x: jax.Array, carry: jax.Array | None = None):
+    """Causal depthwise conv over seq; carry (..., dc-1, di) holds prior tokens."""
+    dc = p["conv_w"].shape[0]
+    if carry is None:
+        carry = jnp.zeros(x.shape[:-2] + (dc - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=-2)
+    out = sum(
+        xp[..., i : i + x.shape[-2], :] * p["conv_w"][i].astype(x.dtype) for i in range(dc)
+    ) + p["conv_b"].astype(x.dtype)
+    return jax.nn.silu(out), xp[..., -(dc - 1) :, :]
+
+
+def mamba_forward(p: PyTree, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Training/prefill pass over a full sequence. x (..., L, D) -> (..., L, D)."""
+    di = cfg.mamba_expand * cfg.d_model
+    l = x.shape[-2]
+    xz = jnp.einsum("...ld,de->...le", x, p["in_proj"]["w"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _conv1d(p, xin)
+
+    chunk = min(_CHUNK, l)
+    n_chunks = -(-l // chunk)
+    pad = n_chunks * chunk - l
+    if pad:
+        xc = jnp.pad(xc, [(0, 0)] * (xc.ndim - 2) + [(0, pad), (0, 0)])
+    lead = xc.shape[:-2]
+    xcc = xc.reshape(lead + (n_chunks, chunk, di))
+    xcc = jnp.moveaxis(xcc, -3, 0)  # (n_chunks, ..., chunk, di)
+
+    def chunk_step(h, xck):
+        decay, bx, c = _ssm_params(p, cfg, xck)
+
+        def assoc(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        a_acc, b_acc = jax.lax.associative_scan(assoc, (decay, bx), axis=-3)
+        h_all = a_acc * h[..., None, :, :] + b_acc  # (..., chunk, di, N)
+        y = jnp.einsum("...lin,...ln->...li", h_all, c)
+        h_next = h_all[..., -1, :, :]
+        return h_next, y
+
+    h0 = jnp.zeros(lead + (di, cfg.mamba_d_state), jnp.float32)
+    if cfg.unroll_scans:
+        # roofline instrumentation: unrolled chunk loop (see configs/base.py)
+        h, y_list = h0, []
+        for ci in range(n_chunks):
+            h, yc = chunk_step(h, xcc[ci])
+            y_list.append(yc)
+        ys = jnp.stack(y_list)
+    else:
+        _, ys = jax.lax.scan(chunk_step, h0, xcc)
+    y = jnp.moveaxis(ys, 0, -3).reshape(lead + (n_chunks * chunk, di))
+    if pad:
+        y = y[..., :l, :]
+    y = y + xc.reshape(lead + (n_chunks * chunk, di))[..., :l, :].astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("...li,id->...ld", y, p["out_proj"]["w"])
+
+
+def init_mamba_cache(cfg: ArchConfig, batch_shape: tuple[int, ...], dtype=None) -> PyTree:
+    di = cfg.mamba_expand * cfg.d_model
+    dt = dtype or cfg.param_dtype
+    return {
+        "conv": jnp.zeros(batch_shape + (cfg.mamba_d_conv - 1, di), dt),
+        "ssm": jnp.zeros(batch_shape + (di, cfg.mamba_d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p: PyTree, cfg: ArchConfig, x: jax.Array, cache: PyTree) -> tuple[jax.Array, PyTree]:
+    """One-token step. x (..., 1, D); O(1) state — the long_500k path."""
+    xz = jnp.einsum("...ld,de->...le", x, p["in_proj"]["w"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_carry = _conv1d(p, xin, cache["conv"].astype(xin.dtype))
+    decay, bx, c = _ssm_params(p, cfg, xc)  # L = 1
+    h = cache["ssm"] * decay[..., 0, :, :] + bx[..., 0, :, :]
+    y = jnp.einsum("...in,...n->...i", h, c[..., 0, :])[..., None, :]
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("...li,id->...ld", y, p["out_proj"]["w"])
+    return out, {"conv": conv_carry.astype(cache["conv"].dtype), "ssm": h}

@@ -1,0 +1,42 @@
+"""Dense FFN variants: SwiGLU / GeGLU / classic GELU MLP."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.initialisation import InitConfig
+from .common import ACTIVATIONS, KeyGen, dense_init
+
+PyTree = Any
+
+__all__ = ["init_ffn", "ffn_forward"]
+
+
+def init_ffn(init_cfg: InitConfig, key: jax.Array, cfg: ArchConfig) -> PyTree:
+    kg = KeyGen(key)
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(init_cfg, kg(), (d, f), dt),
+            "w_in": dense_init(init_cfg, kg(), (d, f), dt),
+            "w_out": dense_init(init_cfg, kg(), (f, d), dt),
+        }
+    if cfg.mlp_type == "gelu_mlp":
+        return {
+            "w_in": dense_init(init_cfg, kg(), (d, f), dt),
+            "w_out": dense_init(init_cfg, kg(), (f, d), dt),
+        }
+    raise ValueError(f"unknown mlp_type {cfg.mlp_type}")
+
+
+def ffn_forward(p: PyTree, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        g = jnp.einsum("...sd,df->...sf", x, p["w_gate"]["w"])
+        h = jnp.einsum("...sd,df->...sf", x, p["w_in"]["w"])
+        return jnp.einsum("...sf,fd->...sd", act(g) * h, p["w_out"]["w"])
+    h = jax.nn.gelu(jnp.einsum("...sd,df->...sf", x, p["w_in"]["w"]))
+    return jnp.einsum("...sf,fd->...sd", h, p["w_out"]["w"])

@@ -1,0 +1,235 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay + channel-mix FFN.
+
+Per head (head_dim = M), with data-dependent per-channel decay w_t ∈ (0,1):
+
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t               S ∈ R^{M×M}
+    o_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)           u = time_first "bonus"
+
+TPU-native rendering: chunked scan — the inter-chunk state carry is a
+``lax.scan``; intra-chunk work is dense matmuls with cumulative-decay
+weighting (the same blocking the Pallas kernel ``repro.kernels.rwkv`` uses,
+which this module's math validates against).
+
+Structured params (decay base, bonus u, token-shift mixes) are not
+gain-corrected; dense projections are (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.initialisation import InitConfig
+from .common import KeyGen, dense_init, norm_apply, norm_init
+
+PyTree = Any
+
+__all__ = ["init_rwkv", "rwkv_time_mix", "rwkv_channel_mix", "rwkv_time_mix_step", "init_rwkv_cache"]
+
+# chunk 32 × clamped per-step log-decay 2.72 → mid-referenced exponent span
+# <= 32/2 × 2.72 ≈ 44 — comfortably inside fp32's exp range (~88)
+_CHUNK = 32
+
+
+def _n_heads(cfg: ArchConfig) -> int:
+    assert cfg.d_model % cfg.rwkv_head_dim == 0
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def init_rwkv(init_cfg: InitConfig, key: jax.Array, cfg: ArchConfig) -> PyTree:
+    kg = KeyGen(key)
+    d = cfg.d_model
+    h = _n_heads(cfg)
+    m = cfg.rwkv_head_dim
+    f = cfg.d_ff
+    dt = cfg.param_dtype
+    lora = max(32, d // 16)  # decay LoRA rank (rwkv6 uses 64 at 2k..4k widths)
+    # structured: decay base spread over channels, bonus, token-shift mixes
+    ratio = jnp.arange(d, dtype=jnp.float32) / max(d - 1, 1)
+    decay_base = -6.0 + 5.0 * ratio**0.7  # rwkv6 init: w in a broad range
+    bonus = jnp.zeros((h, m), jnp.float32) + 0.5 * (1 - ratio).reshape(h, m)
+    return {
+        "tmix": {
+            "mix_r": (0.5 * jnp.ones((d,), jnp.float32)).astype(dt),
+            "mix_k": (0.7 * jnp.ones((d,), jnp.float32)).astype(dt),
+            "mix_v": (0.7 * jnp.ones((d,), jnp.float32)).astype(dt),
+            "mix_g": (0.5 * jnp.ones((d,), jnp.float32)).astype(dt),
+            "mix_w": (0.6 * jnp.ones((d,), jnp.float32)).astype(dt),
+            "wr": dense_init(init_cfg, kg(), (d, d), dt),
+            "wk": dense_init(init_cfg, kg(), (d, d), dt),
+            "wv": dense_init(init_cfg, kg(), (d, d), dt),
+            "wg": dense_init(init_cfg, kg(), (d, d), dt),
+            "wo": dense_init(init_cfg, kg(), (d, d), dt),
+            "decay_lora_a": dense_init(init_cfg, kg(), (d, lora), dt),
+            "decay_lora_b": dense_init(init_cfg, kg(), (lora, d), dt),
+            "decay_base": decay_base,  # fp32 structured
+            "bonus": bonus,  # fp32 structured
+            "out_norm": norm_init(d, "layernorm", jnp.float32),
+        },
+        "cmix": {
+            "mix_k": (0.7 * jnp.ones((d,), jnp.float32)).astype(dt),
+            "mix_r": (0.5 * jnp.ones((d,), jnp.float32)).astype(dt),
+            "wk": dense_init(init_cfg, kg(), (d, f), dt),
+            "wv": dense_init(init_cfg, kg(), (f, d), dt),
+            "wr": dense_init(init_cfg, kg(), (d, d), dt),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x (..., L, D) shifted right by one; position 0 takes ``prev`` (..., 1, D)."""
+    return jnp.concatenate([prev, x[..., :-1, :]], axis=-2)
+
+
+def _tmix_projections(p: PyTree, x: jax.Array, xs: jax.Array, cfg: ArchConfig):
+    h, m = _n_heads(cfg), cfg.rwkv_head_dim
+
+    def lerp(mix):
+        return x + (xs - x) * mix.astype(x.dtype)
+
+    r = jnp.einsum("...ld,de->...le", lerp(p["mix_r"]), p["wr"]["w"])
+    k = jnp.einsum("...ld,de->...le", lerp(p["mix_k"]), p["wk"]["w"])
+    v = jnp.einsum("...ld,de->...le", lerp(p["mix_v"]), p["wv"]["w"])
+    g = jax.nn.silu(jnp.einsum("...ld,de->...le", lerp(p["mix_g"]), p["wg"]["w"]))
+    # data-dependent decay (the "Finch" feature): base + LoRA(x)
+    dw = jnp.einsum("...le,ef->...lf", jnp.tanh(jnp.einsum("...ld,de->...le", lerp(p["mix_w"]), p["decay_lora_a"]["w"])), p["decay_lora_b"]["w"])
+    # stability clamp (TPU adaptation, DESIGN.md): bounds the per-step
+    # log-decay to >= -e so chunked exponent spans stay inside fp32 range
+    z = jnp.clip(p["decay_base"] + dw.astype(jnp.float32), -8.0, 1.0)
+    w = jnp.exp(-jnp.exp(z))  # (..., L, D) in (0, 1), per-step log-decay >= -2.72
+    shp = x.shape[:-1]
+    return (
+        r.reshape(shp + (h, m)),
+        k.reshape(shp + (h, m)),
+        v.reshape(shp + (h, m)),
+        g,
+        w.reshape(shp + (h, m)),
+    )
+
+
+def _wkv_chunked(r, k, v, w, bonus, state, unroll: bool = False):
+    """Chunked linear attention with per-channel decay.
+
+    r,k,v,w: (..., L, H, M) with L a multiple of the chunk size (caller pads);
+    state:   (..., H, M, M) carried across chunks (fp32).
+    Returns (out (..., L, H, M), state').
+
+    Intra-chunk (length c), with cumulative decay  W_t = Π_{τ<=t} diag(w_τ):
+        contribution of state:  r_t W_{t-1} S
+        intra-chunk pairs:      Σ_{s<t} r_t W_{t-1} W_s⁻¹ k_sᵀ v_s + bonus pair
+    computed as dense (c×c) score matmuls — the MXU-friendly form.
+    """
+    lead = r.shape[:-3]
+    l, h, m = r.shape[-3], r.shape[-2], r.shape[-1]
+    c = min(_CHUNK, l)
+    nc = l // c
+    resh = lambda t: jnp.moveaxis(t.reshape(lead + (nc, c, h, m)), -4, 0)
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)  # (nc, ..., c, H, M)
+
+    def chunk(state, inputs):
+        rr, kk, vv, ww = inputs  # (..., c, H, M)
+        rr32, kk32, vv32, ww32 = (t.astype(jnp.float32) for t in (rr, kk, vv, ww))
+        logw = jnp.log(jnp.clip(ww32, 1e-20))
+        cum = jnp.cumsum(logw, axis=-3)  # log W_t, inclusive
+        # state-in contribution: r_t W_{t-1} S — exponent cum_{t-1} <= 0, safe
+        rq = rr32 * jnp.exp(cum - logw)
+        out = jnp.einsum("...thm,...hmn->...thn", rq, state)
+        # intra-chunk pairs: r_t k_s e^{cum_{t-1} - cum_s}, s < t.  Factorising
+        # around the mid-chunk cumulative keeps both factors' exponents within
+        # ±(span/2) — with the per-step log-decay clamp this stays inside fp32
+        # range for the chunk size used here.
+        mid = cum[..., c // 2 : c // 2 + 1, :, :]
+        rq2 = rr32 * jnp.exp(cum - logw - mid)
+        kd2 = kk32 * jnp.exp(mid - cum)
+        scores = jnp.einsum("...thm,...shm->...hts", rq2, kd2)  # (..., H, c, c)
+        tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)
+        scores = scores * tri
+        out = out + jnp.einsum("...hts,...shm->...thm", scores, vv32)
+        # bonus (current-token) term: r_t diag(u) k_t^T v_t
+        diag_term = jnp.einsum("...thm,hm,...thm->...th", rr32, bonus, kk32)
+        out = out + jnp.einsum("...th,...thm->...thm", diag_term, vv32)
+        # state update: S' = W_c S + Σ_s (W_c/W_s) k_sᵀ v_s — exponents <= 0
+        wc_total = jnp.exp(cum[..., -1, :, :])  # (..., H, M)
+        kfac = kk32 * jnp.exp(cum[..., -1:, :, :] - cum)
+        state_new = state * wc_total[..., :, None] + jnp.einsum(
+            "...shm,...shn->...hmn", kfac, vv32
+        )
+        return state_new, out
+
+    if unroll:
+        # roofline instrumentation: unrolled chunk loop (see configs/base.py)
+        outs_list = []
+        for ci in range(nc):
+            state, oc = chunk(state, (rc[ci], kc[ci], vc[ci], wc[ci]))
+            outs_list.append(oc)
+        outs = jnp.stack(outs_list)
+    else:
+        state, outs = jax.lax.scan(chunk, state, (rc, kc, vc, wc))
+    out = jnp.moveaxis(outs, 0, -4).reshape(lead + (l, h, m))
+    return out, state
+
+
+def init_rwkv_cache(cfg: ArchConfig, batch_shape: tuple[int, ...], dtype=None) -> PyTree:
+    d = cfg.d_model
+    h, m = _n_heads(cfg), cfg.rwkv_head_dim
+    dt = dtype or cfg.param_dtype
+    return {
+        "tshift": jnp.zeros(batch_shape + (1, d), dt),
+        "cshift": jnp.zeros(batch_shape + (1, d), dt),
+        "state": jnp.zeros(batch_shape + (h, m, m), jnp.float32),
+    }
+
+
+def rwkv_time_mix(p: PyTree, cfg: ArchConfig, x: jax.Array, prev: jax.Array, state: jax.Array):
+    """Full-sequence time-mix. Returns (y, last_token, state')."""
+    unroll = cfg.unroll_scans
+    h, m = _n_heads(cfg), cfg.rwkv_head_dim
+    xs = _token_shift(x, prev)
+    r, k, v, g, w = _tmix_projections(p, x, xs, cfg)
+    l = x.shape[-2]
+    c = min(_CHUNK, l)
+    pad = (-l) % c
+    if pad:
+        padt = lambda t: jnp.pad(t, [(0, 0)] * (t.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
+        # pad decay with ones so padding tokens don't decay the state
+        r, k, v = padt(r), padt(k), padt(v)
+        w = jnp.pad(w, [(0, 0)] * (w.ndim - 3) + [(0, pad), (0, 0), (0, 0)], constant_values=1.0)
+    out, state = _wkv_chunked(r, k, v, w, p["bonus"], state, unroll=unroll)
+    if pad:
+        out = out[..., :l, :, :]
+    out = out.reshape(x.shape[:-1] + (h * m,))
+    out = norm_apply(p["out_norm"], out, "layernorm")
+    y = jnp.einsum("...ld,de->...le", out.astype(x.dtype) * g, p["wo"]["w"])
+    return y, x[..., -1:, :], state
+
+
+def rwkv_channel_mix(p: PyTree, x: jax.Array, prev: jax.Array):
+    xs = _token_shift(x, prev)
+    lerp = lambda mix: x + (xs - x) * mix.astype(x.dtype)
+    k = jnp.einsum("...ld,df->...lf", lerp(p["mix_k"]), p["wk"]["w"])
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("...lf,fd->...ld", k, p["wv"]["w"])
+    r = jax.nn.sigmoid(jnp.einsum("...ld,de->...le", lerp(p["mix_r"]), p["wr"]["w"]))
+    return r * v, x[..., -1:, :]
+
+
+def rwkv_time_mix_step(p: PyTree, cfg: ArchConfig, x: jax.Array, tshift: jax.Array, state: jax.Array):
+    """Single-token time-mix (L = 1): direct recurrence, O(1) state.
+
+    x (..., 1, D); tshift (..., 1, D) = previous token's input; state
+    (..., H, M, M).  Returns (y (..., 1, D), new_tshift, new_state).
+    """
+    h, m = _n_heads(cfg), cfg.rwkv_head_dim
+    xs = tshift.astype(x.dtype)
+    r, k, v, g, w = _tmix_projections(p, x, xs, cfg)
+    r32, k32, v32, w32 = (t[..., 0, :, :].astype(jnp.float32) for t in (r, k, v, w))
+    kv = jnp.einsum("...hm,...hn->...hmn", k32, v32)
+    out = jnp.einsum("...hm,...hmn->...hn", r32, state + p["bonus"] [..., :, None] * kv)
+    new_state = state * w32[..., :, None] + kv
+    out = out.reshape(x.shape[:-2] + (h * m,))
+    out = norm_apply(p["out_norm"], out[..., None, :], "layernorm")
+    y = jnp.einsum("...ld,de->...le", out.astype(x.dtype) * g, p["wo"]["w"])
+    return y, x, new_state

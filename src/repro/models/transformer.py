@@ -1,0 +1,347 @@
+"""Decoder stack builder: one code path for all 10 assigned architectures.
+
+The layer sequence is ``layer_kinds(cfg)`` (attn / swa / mamba / rwkv cycled
+from ``cfg.block_pattern``) with per-layer FFN kinds from ``ffn_kinds``.  The
+stack is compiled as:
+
+    stack:  n_full repetitions of the repeating unit, parameters stacked on a
+            leading period axis and executed with ``lax.scan`` (keeps HLO and
+            512-device SPMD compile times tractable; DESIGN.md §8), remat
+            around each unit,
+    tail:   n_layers % unit leftover layers, unrolled (gemma3's 34 = 5×6 + 4).
+
+Training/prefill = ``forward``; decode = ``decode_step`` (one token, caches
+threaded through the same scan as stacked xs/ys).  Losses are computed with a
+chunked fused-CE so the (B, S, vocab) logits tensor never materialises.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ffn_kinds, layer_kinds
+from repro.core.initialisation import InitConfig
+from .attention import attention_decode, attention_forward, init_attention, init_kv_cache
+from .common import KeyGen, dense_init, norm_apply, norm_init
+from .mamba import init_mamba, init_mamba_cache, mamba_decode, mamba_forward
+from .mlp import ffn_forward, init_ffn
+from .moe import init_moe, moe_forward
+from .rwkv import (
+    init_rwkv,
+    init_rwkv_cache,
+    rwkv_channel_mix,
+    rwkv_time_mix,
+    rwkv_time_mix_step,
+)
+
+PyTree = Any
+
+__all__ = ["unit_size", "init_params", "forward", "init_cache", "decode_step", "lm_loss", "hidden_to_logits"]
+
+
+# ----------------------------------------------------------------- structure
+def _index_stack(stack: list, per: int) -> tuple:
+    """Select one period's block params/caches from the stacked trees."""
+    return tuple(jax.tree_util.tree_map(lambda t: t[per], p) for p in stack)
+
+
+def unit_size(cfg: ArchConfig) -> int:
+    """Length of the repeating layer unit (pattern period ∨ MoE period)."""
+    u = len(cfg.block_pattern)
+    if cfg.is_moe:
+        u = math.lcm(u, cfg.moe_period)
+    return min(u, cfg.n_layers)
+
+
+def _split_layers(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(unit, n_full_periods, n_tail_layers)."""
+    u = unit_size(cfg)
+    n_full = cfg.n_layers // u
+    tail = cfg.n_layers - n_full * u
+    return u, n_full, tail
+
+
+# ----------------------------------------------------------------- init
+def _init_block(init_cfg: InitConfig, key: jax.Array, cfg: ArchConfig, kind: str, fk: str) -> PyTree:
+    kg = KeyGen(key)
+    dt = cfg.param_dtype
+    p: PyTree = {"norm1": norm_init(cfg.d_model, cfg.norm, dt)}
+    if kind in ("attn", "swa"):
+        p["attn"] = init_attention(init_cfg, kg(), cfg)
+    elif kind == "mamba":
+        p["mamba"] = init_mamba(init_cfg, kg(), cfg)
+    elif kind == "rwkv":
+        p["rwkv"] = init_rwkv(init_cfg, kg(), cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    if kind != "rwkv":
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dt)
+        p["ffn"] = init_moe(init_cfg, kg(), cfg) if fk == "moe" else init_ffn(init_cfg, kg(), cfg)
+    else:
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dt)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ArchConfig, init_cfg: InitConfig) -> PyTree:
+    kg = KeyGen(key)
+    kinds = layer_kinds(cfg)
+    fkinds = ffn_kinds(cfg)
+    u, n_full, tail = _split_layers(cfg)
+
+    stack = []
+    for j in range(u):  # one stacked tree per position-in-unit
+        keys = jax.random.split(kg(), n_full)
+        stacked = jax.vmap(lambda k: _init_block(init_cfg, k, cfg, kinds[j], fkinds[j]))(keys)
+        stack.append(stacked)
+    tail_blocks = [
+        _init_block(init_cfg, kg(), cfg, kinds[n_full * u + j], fkinds[n_full * u + j]) for j in range(tail)
+    ]
+
+    params: PyTree = {
+        "embed": {"tok": dense_init(init_cfg, kg(), (cfg.vocab_size, cfg.d_model), cfg.param_dtype)},
+        "stack": stack,
+        "tail": tail_blocks,
+        "final_norm": norm_init(cfg.d_model, cfg.norm, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(init_cfg, kg(), (cfg.d_model, cfg.vocab_size), cfg.param_dtype)
+    if cfg.frontend:
+        params["frontend_proj"] = dense_init(
+            init_cfg, kg(), (cfg.frontend_embed_dim, cfg.d_model), cfg.param_dtype, bias=True
+        )
+    return params
+
+
+# ----------------------------------------------------------------- forward
+def _block_forward(p: PyTree, cfg: ArchConfig, kind: str, fk: str, x: jax.Array, positions: jax.Array):
+    """Residual block (training/prefill, no cache). Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    if kind in ("attn", "swa"):
+        window = cfg.sliding_window if kind == "swa" else 0
+        x = x + attention_forward(p["attn"], cfg, h, positions, window)
+    elif kind == "mamba":
+        x = x + mamba_forward(p["mamba"], cfg, h)
+    elif kind == "rwkv":
+        # rwkv block: x += tmix(ln1(x)); x += cmix(ln2(x)) — zero initial
+        # shift/state for training/prefill
+        nh = cfg.d_model // cfg.rwkv_head_dim
+        state0 = jnp.zeros(x.shape[:-2] + (nh, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32)
+        prev0 = jnp.zeros(x.shape[:-2] + (1, x.shape[-1]), x.dtype)
+        y_t, _, _ = rwkv_time_mix(p["rwkv"]["tmix"], cfg, h, prev0, state0)
+        x = x + y_t
+        h2 = norm_apply(p["norm2"], x, cfg.norm)
+        y_c, _ = rwkv_channel_mix(p["rwkv"]["cmix"], h2, prev0)
+        return x + y_c, aux
+    h2 = norm_apply(p["norm2"], x, cfg.norm)
+    if fk == "moe":
+        y, aux = moe_forward(p["ffn"], cfg, h2)
+        x = x + y
+    elif fk == "dense":
+        x = x + ffn_forward(p["ffn"], cfg, h2)
+    return x, aux
+
+
+def _embed(params: PyTree, cfg: ArchConfig, tokens: jax.Array, frontend_embeds: jax.Array | None):
+    x = params["embed"]["tok"]["w"][tokens]
+    if cfg.frontend and frontend_embeds is not None:
+        proj = jnp.einsum("...ne,ed->...nd", frontend_embeds, params["frontend_proj"]["w"])
+        proj = proj + params["frontend_proj"]["b"].astype(proj.dtype)
+        x = jnp.concatenate([proj.astype(x.dtype), x], axis=-2)
+    return x
+
+
+def forward(
+    params: PyTree,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    frontend_embeds: jax.Array | None = None,
+    remat: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence pass → (final hidden states (..., S, D), moe aux loss)."""
+    kinds = layer_kinds(cfg)
+    fkinds = ffn_kinds(cfg)
+    u, n_full, tail = _split_layers(cfg)
+    x = _embed(params, cfg, tokens, frontend_embeds)
+    positions = jnp.arange(x.shape[-2])
+
+    def unit_fn(x, unit_params):
+        aux = jnp.zeros((), jnp.float32)
+        for j in range(u):
+            x, a = _block_forward(unit_params[j], cfg, kinds[j], fkinds[j], x, positions)
+            aux = aux + a
+        return x, aux
+
+    body = jax.checkpoint(unit_fn) if remat else unit_fn
+
+    if n_full > 2:
+        x, auxs = jax.lax.scan(lambda c, ps: body(c, ps), x, tuple(params["stack"]))
+        aux = auxs.sum()
+    else:
+        # unrolled path: exact HLO op counts for the roofline's two-point
+        # per-period cost extrapolation (scan bodies are counted once by
+        # XLA cost analysis; see launch/roofline.py)
+        aux = jnp.zeros((), jnp.float32)
+        for per in range(n_full):
+            x, a = body(x, _index_stack(params["stack"], per))
+            aux = aux + a
+
+    for j, bp in enumerate(params["tail"]):
+        x, a = _block_forward(bp, cfg, kinds[n_full * u + j], fkinds[n_full * u + j], x, positions)
+        aux = aux + a
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def hidden_to_logits(params: PyTree, cfg: ArchConfig, hidden: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return jnp.einsum("...sd,vd->...sv", hidden, params["embed"]["tok"]["w"])
+    return jnp.einsum("...sd,dv->...sv", hidden, params["lm_head"]["w"])
+
+
+def lm_loss(
+    params: PyTree,
+    cfg: ArchConfig,
+    hidden: jax.Array,
+    targets: jax.Array,
+    chunk: int = 512,
+) -> jax.Array:
+    """Fused chunked softmax-CE: logits materialise one sequence chunk at a
+    time ((..., chunk, V) instead of (..., S, V)) — essential at V = 262k."""
+    s = hidden.shape[-2]
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    rem = s - n_chunks * chunk
+
+    @jax.checkpoint
+    def ce(h, t):
+        logits = hidden_to_logits(params, cfg, h).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return (lse - picked).sum()
+
+    # unrolled (static) chunk loop: per-chunk remat bounds the live logits to
+    # one (..., chunk, V) tile, and the unrolled HLO keeps cost_analysis
+    # honest (a scan here would count one chunk only — see launch/roofline)
+    total = jnp.zeros((), jnp.float32)
+    for i in range(n_chunks):
+        total = total + ce(
+            jax.lax.slice_in_dim(hidden, i * chunk, (i + 1) * chunk, axis=hidden.ndim - 2),
+            jax.lax.slice_in_dim(targets, i * chunk, (i + 1) * chunk, axis=targets.ndim - 1),
+        )
+    if rem:
+        total = total + ce(hidden[..., -rem:, :], targets[..., -rem:])
+    n_tokens = math.prod(targets.shape)
+    return total / n_tokens
+
+
+# ----------------------------------------------------------------- decode
+def _init_block_cache(cfg: ArchConfig, kind: str, batch_shape: tuple[int, ...], cache_len: int) -> PyTree:
+    if kind == "attn":
+        return init_kv_cache(cfg, batch_shape, cache_len)
+    if kind == "swa":
+        return init_kv_cache(cfg, batch_shape, min(cfg.sliding_window, cache_len))
+    if kind == "mamba":
+        return init_mamba_cache(cfg, batch_shape)
+    if kind == "rwkv":
+        return init_rwkv_cache(cfg, batch_shape)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch_shape: tuple[int, ...], cache_len: int) -> PyTree:
+    kinds = layer_kinds(cfg)
+    u, n_full, tail = _split_layers(cfg)
+
+    stack = []
+    for j in range(u):
+        one = _init_block_cache(cfg, kinds[j], batch_shape, cache_len)
+        stacked = jax.tree_util.tree_map(lambda t: jnp.broadcast_to(t, (n_full,) + t.shape).copy(), one)
+        stack.append(stacked)
+    tail_caches = [
+        _init_block_cache(cfg, kinds[n_full * u + j], batch_shape, cache_len) for j in range(tail)
+    ]
+    return {"stack": stack, "tail": tail_caches}
+
+
+def _block_decode(p: PyTree, cfg: ArchConfig, kind: str, fk: str, x: jax.Array, cache: PyTree, pos: jax.Array):
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    if kind in ("attn", "swa"):
+        window = cfg.sliding_window if kind == "swa" else 0
+        y, cache = attention_decode(p["attn"], cfg, h, cache, pos, window)
+        x = x + y
+    elif kind == "mamba":
+        y, cache = mamba_decode(p["mamba"], cfg, h, cache)
+        x = x + y
+    elif kind == "rwkv":
+        y_t, tshift, state = rwkv_time_mix_step(
+            p["rwkv"]["tmix"], cfg, h, cache["tshift"], cache["state"]
+        )
+        x = x + y_t
+        h2 = norm_apply(p["norm2"], x, cfg.norm)
+        y_c, cshift = rwkv_channel_mix(p["rwkv"]["cmix"], h2, cache["cshift"].astype(h2.dtype))
+        x = x + y_c
+        cache = {
+            "tshift": tshift.astype(cache["tshift"].dtype),
+            "cshift": cshift.astype(cache["cshift"].dtype),
+            "state": state,
+        }
+        return x, cache
+    h2 = norm_apply(p["norm2"], x, cfg.norm)
+    if fk == "moe":
+        y, _ = moe_forward(p["ffn"], cfg, h2)
+        x = x + y
+    elif fk == "dense":
+        x = x + ffn_forward(p["ffn"], cfg, h2)
+    return x, cache
+
+
+def decode_step(
+    params: PyTree,
+    cfg: ArchConfig,
+    cache: PyTree,
+    tokens: jax.Array,
+    pos: jax.Array,
+) -> tuple[jax.Array, PyTree]:
+    """One decode step. tokens (..., 1) int32; pos () int32 = absolute index.
+
+    Returns (logits (..., 1, V), new cache).
+    """
+    kinds = layer_kinds(cfg)
+    fkinds = ffn_kinds(cfg)
+    u, n_full, tail = _split_layers(cfg)
+    x = _embed(params, cfg, tokens, None)
+
+    def unit_fn(x, scanned):
+        unit_params, unit_cache = scanned
+        new_caches = []
+        for j in range(u):
+            x, c = _block_decode(unit_params[j], cfg, kinds[j], fkinds[j], x, unit_cache[j], pos)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if n_full > 2:
+        x, new_stack = jax.lax.scan(unit_fn, x, (tuple(params["stack"]), tuple(cache["stack"])))
+        new_stack = list(new_stack)
+    else:
+        # unrolled path (see forward): exact op counts for roofline extrapolation
+        per_caches = []
+        for per in range(n_full):
+            ps = _index_stack(params["stack"], per)
+            cs = _index_stack(cache["stack"], per)
+            x, ncs = unit_fn(x, (ps, cs))
+            per_caches.append(ncs)
+        new_stack = [
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *[pc[j] for pc in per_caches])
+            for j in range(u)
+        ]
+
+    new_tail = []
+    for j, bp in enumerate(params["tail"]):
+        x, c = _block_decode(bp, cfg, kinds[n_full * u + j], fkinds[n_full * u + j], x, cache["tail"][j], pos)
+        new_tail.append(c)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = hidden_to_logits(params, cfg, x)
+    return logits, {"stack": new_stack, "tail": new_tail}

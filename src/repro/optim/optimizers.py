@@ -1,0 +1,90 @@
+"""Hand-rolled optimizers (no optax in this environment).
+
+The paper (Appendix A, Table A1) uses SGD with momentum m = 0.5 and AdamW
+(decoupled weight decay) with β₁=0.9, β₂=0.999, ε=1e-8, λ=1e-2, both at
+lr = 1e-3.  Algorithm 1 line 15 *re-initialises optimizer state after every
+aggregation* — ``Optimizer.init`` is therefore on the hot path and must be
+jit-friendly (it is: pure tree_map of zeros_like).
+
+API mirrors optax: ``opt.init(params) -> state``,
+``opt.update(grads, state, params) -> (updates, state)``; apply with
+``tree_map(lambda p, u: p + u, params, updates)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["Optimizer", "sgd", "adamw"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    name: str = "optimizer"
+
+
+class SgdState(NamedTuple):
+    momentum: PyTree
+
+
+def sgd(learning_rate: float = 1e-3, momentum: float = 0.5) -> Optimizer:
+    """SGD with (heavy-ball) momentum: v ← m·v + g;  Δ = -lr·v."""
+
+    def init(params: PyTree) -> SgdState:
+        return SgdState(momentum=jax.tree_util.tree_map(jnp.zeros_like, params))
+
+    def update(grads: PyTree, state: SgdState, params: PyTree) -> tuple[PyTree, SgdState]:
+        del params
+        v = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state.momentum, grads)
+        updates = jax.tree_util.tree_map(lambda m: -learning_rate * m, v)
+        return updates, SgdState(momentum=v)
+
+    return Optimizer(init=init, update=update, name=f"sgd(lr={learning_rate},m={momentum})")
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw(
+    learning_rate: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 1e-2,
+) -> Optimizer:
+    """Adam with decoupled weight decay (Loshchilov & Hutter).
+
+    Decay is applied to the *parameters* (decoupled), not folded into the
+    gradient — matching torch.optim.AdamW that the paper used.
+    """
+
+    def init(params: PyTree) -> AdamWState:
+        z = lambda t: jax.tree_util.tree_map(jnp.zeros_like, t)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=z(params), nu=z(params))
+
+    def update(grads: PyTree, state: AdamWState, params: PyTree) -> tuple[PyTree, AdamWState]:
+        step = state.step + 1
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            return -learning_rate * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update, name=f"adamw(lr={learning_rate},wd={weight_decay})")

@@ -1,0 +1,56 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, restore_train_state, save_pytree, save_train_state
+from repro.optim import adamw
+
+
+def test_roundtrip_dtypes_and_structure(tmp_path):
+    tree = {
+        "bf16": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+        "f32": jnp.ones((4,), jnp.float32) * 1.5,
+        "i32": jnp.asarray([1, 2, 3], jnp.int32),
+        "nested": [{"x": np.float64(2.5)}, (jnp.zeros(2),)],
+    }
+    p = str(tmp_path / "t.ckpt")
+    save_pytree(p, tree, meta={"step": 7})
+    back, meta = load_pytree(p)
+    assert meta["step"] == 7
+    assert np.asarray(back["bf16"]).dtype == jnp.bfloat16
+    assert np.allclose(np.asarray(back["bf16"], np.float32), np.arange(6).reshape(2, 3))
+    assert np.allclose(back["f32"], 1.5)
+    assert back["nested"][1][0].shape == (2,)
+
+
+def test_template_restores_namedtuples(tmp_path):
+    opt = adamw()
+    params = {"w": jnp.ones((3, 3))}
+    state = opt.init(params)
+    p = str(tmp_path / "opt.ckpt")
+    save_pytree(p, state)
+    back, _ = load_pytree(p, template=state)
+    assert type(back).__name__ == "AdamWState"
+    assert int(back.step) == 0
+
+
+def test_latest_pointer_and_train_state(tmp_path):
+    d = str(tmp_path / "ckpts")
+    state = {"params": {"w": jnp.ones(3)}, "round": jnp.asarray(5)}
+    save_train_state(d, 5, state)
+    save_train_state(d, 10, {"params": {"w": jnp.ones(3) * 2}, "round": jnp.asarray(10)})
+    got, meta = restore_train_state(d, template=state)
+    assert meta["step"] == 10
+    assert np.allclose(got["params"]["w"], 2.0)
+
+
+def test_restore_missing_returns_none(tmp_path):
+    assert restore_train_state(str(tmp_path / "nope")) is None
+
+
+def test_atomic_write_leaves_no_tmp(tmp_path):
+    p = str(tmp_path / "a.ckpt")
+    save_pytree(p, {"x": jnp.zeros(2)})
+    assert not os.path.exists(p + ".tmp")

@@ -1,0 +1,86 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decavg as D
+from repro.core import mixing as M
+from repro.core import topology as T
+
+
+def test_mix_pytree_matches_per_leaf_einsum():
+    g = T.random_k_regular(8, 4, seed=0)
+    m = jnp.asarray(M.receive_matrix(g), jnp.float32)
+    params = {
+        "a": jax.random.normal(jax.random.PRNGKey(0), (8, 5, 3)),
+        "b": {"w": jax.random.normal(jax.random.PRNGKey(1), (8, 7))},
+    }
+    mixed = D.mix_pytree(m, params)
+    want_a = jnp.einsum("ij,jkl->ikl", m, params["a"])
+    assert np.allclose(mixed["a"], want_a, atol=1e-6)
+
+
+def test_consensus_is_fixed_point():
+    g = T.complete(6)
+    m = jnp.asarray(M.receive_matrix(g), jnp.float32)
+    w = jnp.broadcast_to(jnp.arange(4.0), (6, 4))
+    assert np.allclose(D.mix_array(m, w), w, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 30))
+def test_mixing_contracts_cross_node_variance(seed):
+    """One DecAvg round never increases σ_an (averaging is a contraction)."""
+    g = T.random_k_regular(16, 4, seed=seed)
+    m = jnp.asarray(M.receive_matrix(g), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (16, 64))
+    w2 = D.mix_array(m, w)
+    assert float(jnp.std(w2, axis=0).mean()) <= float(jnp.std(w, axis=0).mean()) + 1e-6
+
+
+def test_complete_graph_single_round_consensus():
+    """On a complete graph DecAvg averages everything in one round (= FedAvg)."""
+    g = T.complete(10)
+    m = jnp.asarray(M.receive_matrix(g), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(0), (10, 32))
+    w2 = D.mix_array(m, w)
+    assert np.allclose(w2, w.mean(axis=0, keepdims=True), atol=1e-5)
+
+
+def test_failure_receive_matrix_isolated_node_keeps_params():
+    g = T.ring(5)
+    # all links down → every node keeps exactly its own params
+    a = jnp.zeros((5, 5))
+    m = D.failure_receive_matrix(a)
+    assert np.allclose(m, np.eye(5))
+
+
+def test_link_failure_mask_statistics():
+    g = T.complete(32)
+    key = jax.random.PRNGKey(0)
+    kept = D.link_failure_mask(key, g, p=0.25)
+    frac = float(kept.sum() / g.adjacency.sum())
+    assert 0.18 < frac < 0.32
+    assert np.allclose(np.asarray(kept), np.asarray(kept).T)
+
+
+def test_node_failure_mask_removes_rows_and_cols():
+    g = T.complete(16)
+    a = D.node_failure_mask(jax.random.PRNGKey(1), g, p=0.5)
+    a = np.asarray(a)
+    inactive = np.nonzero(a.sum(1) == 0)[0]
+    assert len(inactive) > 0
+    assert np.all(a[:, inactive] == 0)
+
+
+def test_data_weighted_receive_matrix_matches_eq2():
+    """β_i = |D_i| / (|D_i| + Σ_j |D_j|) exactly (paper Eq. 2)."""
+    g = T.ring(4)
+    sizes = np.array([10.0, 20.0, 30.0, 40.0])
+    m = np.asarray(D.failure_receive_matrix(jnp.asarray(g.adjacency), jnp.asarray(sizes)))
+    # node 0's neighbours on the ring are 1 and 3
+    denom = 10 + 20 + 40
+    assert np.isclose(m[0, 0], 10 / denom)
+    assert np.isclose(m[0, 1], 20 / denom)
+    assert np.isclose(m[0, 3], 40 / denom)
+    assert m[0, 2] == 0

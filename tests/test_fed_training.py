@@ -1,0 +1,123 @@
+"""End-to-end DFL training behaviour (the paper's system claims)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import topology as T
+from repro.core.initialisation import InitConfig, gain_from_graph
+from repro.data import mnist_like, node_batch_iterator, node_datasets, partition_iid
+from repro.fed import consensus_params, init_fl_state, make_eval_fn, make_round_fn, sigma_metrics, train_loop
+from repro.models.paper_models import accuracy, classifier_loss, init_mlp, mlp_forward
+from repro.optim import sgd
+
+
+def _setup(n_nodes=8, per_node=64, hidden=(64, 32)):
+    ds = mnist_like(n_nodes * per_node + 256, seed=0)
+    parts = [np.arange(i * per_node, (i + 1) * per_node) for i in range(n_nodes)]
+    xs, ys = node_datasets(ds, parts)
+    test = (ds.x[-256:], ds.y[-256:])
+    loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
+    return xs, ys, test, loss_fn, hidden
+
+
+def _batches(xs, ys, b_local=2, bs=16, seed=0):
+    it = node_batch_iterator(xs, ys, bs, seed=seed)
+    while True:
+        batches = [next(it) for _ in range(b_local)]
+        yield (
+            np.stack([b.x for b in batches], axis=1),
+            np.stack([b.y for b in batches], axis=1),
+        )
+
+
+def test_corrected_init_escapes_plateau_uncorrected_stalls():
+    """The paper's Fig. 1 phenomenon — needs n and model large enough that
+    the √n compression actually stalls the He baseline (n = 16, the paper's
+    MLP widths)."""
+    xs, ys, test, loss_fn, _ = _setup(n_nodes=16, per_node=128)
+    hidden = (512, 256, 128)  # the paper's MLP
+    g = T.complete(16)
+    opt = sgd(1e-3, 0.5)
+    eval_fn = make_eval_fn(loss_fn)
+    results = {}
+    for name, gain in [("plain", 1.0), ("corrected", gain_from_graph(g))]:
+        init_one = lambda k: init_mlp(InitConfig("he_normal", gain), k, hidden=hidden)
+        state = init_fl_state(jax.random.PRNGKey(0), 16, init_one, opt)
+        rf = make_round_fn(loss_fn, opt, g)
+        state, hist = train_loop(state, rf, _batches(xs, ys, b_local=4), n_rounds=40, eval_every=39,
+                                 eval_fn=eval_fn, eval_batch=test)
+        results[name] = hist["test_loss"][-1]
+    # plain He sits on the log(10) ≈ 2.303 plateau; corrected escapes it
+    assert results["plain"] > 2.25
+    assert results["corrected"] < results["plain"] - 0.5
+
+
+def test_sigma_dynamics_match_theory():
+    """σ_an collapses fast; σ_ap → σ_init‖v_steady‖ (paper Fig. 3b)."""
+    xs, ys, test, loss_fn, hidden = _setup()
+    g = T.complete(8)
+    opt = sgd(1e-3, 0.5)
+    init_one = lambda k: init_mlp(InitConfig("he_normal", 1.0), k, hidden=hidden)
+    state = init_fl_state(jax.random.PRNGKey(1), 8, init_one, opt)
+    s0 = sigma_metrics(state.params)
+    rf = make_round_fn(loss_fn, opt, g)
+    state, _ = train_loop(state, rf, _batches(xs, ys), n_rounds=10)
+    s1 = sigma_metrics(state.params)
+    # complete graph: one round is full consensus → σ_an collapses by >10x
+    assert float(s1["sigma_an"]) < float(s0["sigma_an"]) / 10
+    # σ_ap compressed toward ‖v_steady‖ = 1/√8 of its start
+    ratio = float(s1["sigma_ap"]) / float(s0["sigma_ap"])
+    assert 0.25 < ratio < 0.55  # 1/√8 ≈ 0.354 ± training drift
+
+
+def test_failures_still_learn():
+    """Fig. 2: p = 0.5 link failures slow but do not break training."""
+    xs, ys, test, loss_fn, hidden = _setup()
+    g = T.complete(8)
+    opt = sgd(1e-3, 0.5)
+    eval_fn = make_eval_fn(loss_fn)
+    init_one = lambda k: init_mlp(InitConfig("he_normal", gain_from_graph(g)), k, hidden=hidden)
+    state = init_fl_state(jax.random.PRNGKey(2), 8, init_one, opt)
+    rf = make_round_fn(loss_fn, opt, g, link_p=0.5)
+    state, hist = train_loop(state, rf, _batches(xs, ys), n_rounds=30, eval_every=29,
+                             eval_fn=eval_fn, eval_batch=test)
+    first, last = hist["test_loss"][0], hist["test_loss"][-1]
+    assert last < first - 0.1
+
+
+def test_isolated_nodes_when_node_p_zero():
+    """node_p→0: no aggregation happens; models stay distinct."""
+    xs, ys, test, loss_fn, hidden = _setup()
+    g = T.complete(8)
+    opt = sgd(1e-3, 0.5)
+    init_one = lambda k: init_mlp(InitConfig("he_normal", 1.0), k, hidden=hidden)
+    state = init_fl_state(jax.random.PRNGKey(3), 8, init_one, opt)
+    rf = make_round_fn(loss_fn, opt, g, node_p=1e-9)
+    state2, _ = train_loop(state, rf, _batches(xs, ys), n_rounds=3)
+    s = sigma_metrics(state2.params)
+    assert float(s["sigma_an"]) > 0.01  # no consensus formed
+
+
+def test_consensus_params_average():
+    params = {"w": jnp.stack([jnp.full((3,), float(i)) for i in range(4)])}
+    c = consensus_params(params)
+    assert np.allclose(c["w"], 1.5)
+    cw = consensus_params(params, weights=jnp.asarray([1.0, 0, 0, 1.0]))
+    assert np.allclose(cw["w"], 1.5)
+
+
+def test_decentralised_matches_fedavg_on_complete_graph():
+    """§3: DecAvg on a complete graph ≡ centralised FedAvg."""
+    xs, ys, test, loss_fn, hidden = _setup(n_nodes=4)
+    g = T.complete(4)
+    opt = sgd(1e-2, 0.0)
+    init_one = lambda k: init_mlp(InitConfig("he_normal", 2.0), k, hidden=hidden)
+    state = init_fl_state(jax.random.PRNGKey(5), 4, init_one, opt)
+    rf = make_round_fn(loss_fn, opt, g)
+    batches = _batches(xs, ys, b_local=1)
+    state, _ = train_loop(state, rf, batches, n_rounds=2)
+    # after any round all nodes are identical (complete graph, equal data)
+    w = state.params["fc0"]["w"]
+    assert np.allclose(w[0], w[1], atol=1e-5)
+    assert np.allclose(w[0], w[3], atol=1e-5)

@@ -1,0 +1,43 @@
+import numpy as np
+
+from repro.core import gossip as G
+from repro.core import mixing as M
+from repro.core import topology as T
+
+
+def test_push_sum_reaches_average():
+    g = T.random_k_regular(32, 4, seed=0)
+    vals = np.arange(32, dtype=float)
+    avg = G.push_sum(g, vals, rounds=300)
+    assert np.allclose(avg, vals.mean(), rtol=1e-6)
+
+
+def test_size_estimation_every_node():
+    g = T.erdos_renyi_gnp(48, 0.15, seed=1)
+    est = G.estimate_size(g, rounds=400)
+    assert np.allclose(est, 48, rtol=1e-6)
+
+
+def test_mean_degree_estimation():
+    g = T.barabasi_albert(64, 3, seed=2)
+    est = G.estimate_mean_degree(g, rounds=400)
+    assert np.allclose(est, g.mean_degree, rtol=1e-6)
+
+
+def test_degree_polling_bias_correction():
+    """Uncorrected walks oversample hubs (q(k) bias); corrected ≈ p(k)."""
+    g = T.configuration_heavy_tail(256, 2.2, seed=3)
+    raw = G.poll_degrees(g, start=0, walk_length=15, n_walks=600, seed=0, correct_bias=False)
+    fixed = G.poll_degrees(g, start=0, walk_length=15, n_walks=600, seed=0, correct_bias=True)
+    true_mean = g.degrees.mean()
+    assert raw.mean() > true_mean  # hub bias
+    assert abs(fixed.mean() - true_mean) < abs(raw.mean() - true_mean)
+
+
+def test_gossip_to_gain_pipeline():
+    """§4.4 end-to-end: estimate n + poll degrees → ‖v_steady‖ within 20%."""
+    g = T.barabasi_albert(128, 4, seed=4)
+    n_est = float(G.estimate_size(g, rounds=300)[5])
+    sample = G.poll_degrees(g, start=5, walk_length=20, n_walks=500, seed=5)
+    est = M.v_steady_norm_from_degree_sample(sample, int(round(n_est)))
+    assert abs(est - M.v_steady_norm(g)) / M.v_steady_norm(g) < 0.2

@@ -1,0 +1,61 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import initialisation as I
+from repro.core import topology as T
+
+
+@pytest.mark.parametrize("dist,expected_std", [
+    ("he_normal", np.sqrt(2.0 / 400)),
+    ("glorot_normal", np.sqrt(2.0 / (400 + 300))),
+])
+def test_init_std_matches_formula(dist, expected_std):
+    cfg = I.InitConfig(dist, gain=1.0)
+    w = I.scaled_init(cfg, jax.random.PRNGKey(0), (400, 300))
+    assert np.isclose(float(jnp.std(w)), expected_std, rtol=0.05)
+
+
+def test_gain_scales_std_linearly():
+    base = I.scaled_init(I.InitConfig("he_normal", 1.0), jax.random.PRNGKey(0), (512, 512))
+    scaled = I.scaled_init(I.InitConfig("he_normal", 7.0), jax.random.PRNGKey(0), (512, 512))
+    assert np.isclose(float(jnp.std(scaled)) / float(jnp.std(base)), 7.0, rtol=1e-5)
+
+
+def test_uniform_variants_bounded():
+    w = I.scaled_init(I.InitConfig("he_uniform", 2.0), jax.random.PRNGKey(1), (100, 100))
+    limit = np.sqrt(6.0 / 100) * 2.0
+    assert float(jnp.abs(w).max()) <= limit + 1e-6
+
+
+def test_gain_from_graph_regular_is_sqrt_n():
+    g = T.random_k_regular(64, 8, seed=0)
+    assert np.isclose(I.gain_from_graph(g), 8.0, rtol=1e-10)  # √64
+
+
+def test_gain_from_estimates_fallbacks():
+    # homogeneous assumption: gain = √n̂
+    assert np.isclose(I.gain_from_estimates(100.0), 10.0)
+    # family exponent α: gain = n̂^α
+    assert np.isclose(I.gain_from_estimates(256.0, family_exponent=0.25), 4.0)
+    # degree sample (regular): matches closed form
+    g = T.random_k_regular(64, 8, seed=0)
+    est = I.gain_from_estimates(64, degree_sample=g.degrees)
+    assert np.isclose(est, 8.0, rtol=1e-6)
+
+
+def test_misestimated_n_degrades_gracefully():
+    """Paper Fig. 4(a): 2x over/under-estimation changes gain only by √2."""
+    g = T.random_k_regular(64, 8, seed=0)
+    exact = I.gain_from_graph(g)
+    over = I.gain_from_estimates(128)
+    under = I.gain_from_estimates(32)
+    assert exact / np.sqrt(2) - 1e-9 <= under <= over <= exact * np.sqrt(2) + 1e-9
+
+
+def test_conv_fans():
+    cfg = I.InitConfig("he_normal", 1.0)
+    w = I.scaled_init(cfg, jax.random.PRNGKey(0), (3, 3, 16, 32))
+    # fan_in = 3*3*16
+    assert np.isclose(float(jnp.std(w)), np.sqrt(2.0 / 144), rtol=0.05)

@@ -1,0 +1,185 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
+mode executes the Pallas kernel bodies in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash.flash import flash_mha
+from repro.kernels.flash.ref import attention_ref
+from repro.kernels.mix.mix import mix_matmul
+from repro.kernels.mix.ops import decavg_mix
+from repro.kernels.mix.ref import decavg_mix_ref
+from repro.kernels.rwkv.rwkv import rwkv6_chunked
+from repro.kernels.rwkv.ref import rwkv6_ref
+
+
+# ------------------------------------------------------------------ mix
+@pytest.mark.parametrize("n,d", [(8, 64), (16, 1000), (64, 4096), (100, 257), (256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mix_matmul_sweep(n, d, dtype):
+    m = jax.random.uniform(jax.random.PRNGKey(n), (n, n), jnp.float32)
+    m = m / m.sum(1, keepdims=True)
+    w = jax.random.normal(jax.random.PRNGKey(d), (n, d), jnp.float32).astype(dtype)
+    got = mix_matmul(m, w, interpret=True)
+    ref = decavg_mix_ref(m, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([4, 12, 32]),
+    d=st.integers(1, 300),
+    bn=st.sampled_from([8, 32, 128]),
+)
+def test_mix_matmul_block_shapes_property(n, d, bn):
+    """Any block shape must give the same answer (padding correctness)."""
+    m = jax.random.uniform(jax.random.PRNGKey(0), (n, n))
+    m = m / m.sum(1, keepdims=True)
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    got = mix_matmul(m, w, block_n=bn, block_d=64, interpret=True)
+    ref = decavg_mix_ref(m, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+def test_decavg_mix_pytree_wrapper():
+    n = 8
+    m = jax.random.uniform(jax.random.PRNGKey(0), (n, n))
+    m = m / m.sum(1, keepdims=True)
+    tree = {
+        "a": jax.random.normal(jax.random.PRNGKey(1), (n, 16, 4)),
+        "b": {"w": jax.random.normal(jax.random.PRNGKey(2), (n, 33)).astype(jnp.bfloat16)},
+    }
+    got = decavg_mix(m, tree, interpret=True)
+    want_a = jnp.einsum("ij,jkl->ikl", m, tree["a"])
+    np.testing.assert_allclose(np.asarray(got["a"]), np.asarray(want_a), atol=1e-5)
+    assert got["b"]["w"].dtype == jnp.bfloat16
+
+
+def test_mix_row_stochastic_preserves_consensus():
+    n = 16
+    m = jnp.full((n, n), 1.0 / n)
+    w = jnp.broadcast_to(jnp.arange(40.0), (n, 40))
+    got = mix_matmul(m, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(w), atol=1e-5)
+
+
+# ------------------------------------------------------------------ flash
+@pytest.mark.parametrize(
+    "b,h,kvh,s,hd,causal,window",
+    [
+        (2, 4, 2, 256, 64, True, 0),   # GQA causal
+        (1, 4, 4, 200, 32, True, 64),  # MHA sliding window, padded seq
+        (2, 2, 1, 128, 64, False, 0),  # bidirectional
+        (1, 8, 2, 96, 128, True, 0),   # group 4
+        (1, 2, 2, 512, 64, True, 128), # long + window
+    ],
+)
+def test_flash_sweep(b, h, kvh, s, hd, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, kvh, s, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, kvh, s, hd), jnp.float32)
+    got = flash_mha(q, k, v, causal=causal, window=window, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bf16_io():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 128, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 128, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 128, 64)).astype(jnp.bfloat16)
+    got = flash_mha(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_flash_matches_model_attention_module():
+    """The kernel and models/attention must implement the same math."""
+    from repro.configs import get_reduced_config
+    from repro.models.attention import _sdpa, _causal_mask
+
+    cfg = get_reduced_config("qwen2p5_3b")
+    b, s, h, kvh, hd = 2, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kvh, hd))
+    v = jax.random.normal(ks[2], (b, s, kvh, hd))
+    model_out = _sdpa(q, k, v, _causal_mask(s), 1.0 / hd**0.5)
+    from repro.kernels.flash.ops import flash_attention
+
+    kern_out = flash_attention(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(model_out), np.asarray(kern_out), atol=2e-5)
+
+
+# ------------------------------------------------------------------ rwkv
+@pytest.mark.parametrize("bh,l,m", [(2, 64, 32), (6, 200, 64), (1, 33, 128), (4, 32, 64)])
+def test_rwkv_sweep(bh, l, m):
+    ks = jax.random.split(jax.random.PRNGKey(bh * l), 5)
+    r = jax.random.normal(ks[0], (bh, l, m))
+    k = jax.random.normal(ks[1], (bh, l, m)) * 0.5
+    v = jax.random.normal(ks[2], (bh, l, m))
+    z = jnp.clip(jax.random.normal(ks[3], (bh, l, m)) * 2.0, -8.0, 1.0)
+    w = jnp.exp(-jnp.exp(z))
+    u = jnp.abs(jax.random.normal(ks[4], (bh, m))) * 0.3
+    got = rwkv6_chunked(r, k, v, w, u, interpret=True)
+    ref = rwkv6_ref(r, k, v, w, u)
+    scale = float(jnp.abs(ref).max())
+    np.testing.assert_allclose(np.asarray(got) / scale, np.asarray(ref) / scale, atol=5e-5)
+
+
+def test_rwkv_extreme_decay_stable():
+    """Near-zero and near-one decays must not overflow (fp32 exponent span)."""
+    bh, l, m = 2, 128, 32
+    r = jnp.ones((bh, l, m))
+    k = jnp.ones((bh, l, m))
+    v = jnp.ones((bh, l, m))
+    w = jnp.where(jnp.arange(l)[None, :, None] % 2 == 0, 0.066, 0.9997)  # clamp extremes
+    u = jnp.zeros((bh, m))
+    got = rwkv6_chunked(r, k, v, jnp.broadcast_to(w, (bh, l, m)), u, interpret=True)
+    assert bool(jnp.isfinite(got).all())
+    ref = rwkv6_ref(r, k, v, jnp.broadcast_to(w, (bh, l, m)), u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv_ops_layout_wrapper():
+    from repro.kernels.rwkv.ops import rwkv6_attention
+
+    b, l, h, m = 2, 50, 3, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(ks[0], (b, l, h, m))
+    k = jax.random.normal(ks[1], (b, l, h, m)) * 0.3
+    v = jax.random.normal(ks[2], (b, l, h, m))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, l, h, m)) + 2)
+    u = jnp.abs(jax.random.normal(ks[4], (h, m)))
+    got = rwkv6_attention(r, k, v, w, u, interpret=True)
+    fold = lambda t: jnp.moveaxis(t, -2, -3).reshape(-1, l, m)
+    ref = rwkv6_ref(fold(r), fold(k), fold(v), fold(w), jnp.tile(u, (b, 1)))
+    ref = jnp.moveaxis(ref.reshape(b, h, l, m), 1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_rwkv_kernel_matches_model_module():
+    """Kernel ↔ models/rwkv._wkv_chunked consistency (same clamped math)."""
+    from repro.models.rwkv import _wkv_chunked
+
+    b, l, h, m = 1, 96, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    shape = (b, l, h, m)
+    r = jax.random.normal(ks[0], shape)
+    k = jax.random.normal(ks[1], shape) * 0.5
+    v = jax.random.normal(ks[2], shape)
+    w = jnp.exp(-jnp.exp(jnp.clip(jax.random.normal(ks[3], shape), -8, 1)))
+    u = jnp.abs(jax.random.normal(ks[4], (h, m))) * 0.2
+    state0 = jnp.zeros((b, h, m, m), jnp.float32)
+    model_out, _ = _wkv_chunked(r, k, v, w, u, state0)
+    from repro.kernels.rwkv.ops import rwkv6_attention
+
+    kern_out = rwkv6_attention(r, k, v, w, u, interpret=True)
+    np.testing.assert_allclose(np.asarray(model_out), np.asarray(kern_out), atol=3e-5)

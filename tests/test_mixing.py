@@ -1,0 +1,124 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mixing as M
+from repro.core import topology as T
+
+
+def _random_graph(seed: int, n: int):
+    kind = seed % 3
+    if kind == 0:
+        return T.erdos_renyi_gnp(n, 4.0 / n + 0.05, seed=seed)
+    if kind == 1:
+        return T.random_k_regular(n, 4, seed=seed)
+    return T.barabasi_albert(n, 3, seed=seed)
+
+
+# ---------------------------------------------------------------- properties
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 50), n=st.sampled_from([16, 24, 32, 64]))
+def test_mixing_matrix_is_column_stochastic(seed, n):
+    g = _random_graph(seed, n)
+    ap = M.mixing_matrix(g)
+    assert np.allclose(ap.sum(axis=0), 1.0, atol=1e-12)
+    assert np.all(ap >= 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 50), n=st.sampled_from([16, 32, 64]))
+def test_receive_matrix_row_stochastic_and_consensus_fixed_point(seed, n):
+    g = _random_graph(seed, n)
+    m = M.receive_matrix(g)
+    assert np.allclose(m.sum(axis=1), 1.0, atol=1e-12)
+    # consensus (equal params) is a fixed point of DecAvg
+    w = np.ones((n, 5)) * 3.7
+    assert np.allclose(m @ w, w)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 50), n=st.sampled_from([16, 32, 64]))
+def test_v_steady_is_stationary_and_normalised(seed, n):
+    g = _random_graph(seed, n)
+    v = M.v_steady(g)
+    ap = M.mixing_matrix(g)
+    assert np.allclose(v.sum(), 1.0)
+    assert np.allclose(ap @ v, v, atol=1e-10)
+    # Cauchy–Schwarz floor (paper §4.3): ‖v‖² >= 1/n
+    assert M.v_steady_norm(g) >= 1.0 / np.sqrt(n) - 1e-12
+
+
+def test_v_steady_closed_form_vs_power_iteration():
+    g = T.barabasi_albert(128, 4, seed=2)
+    v_closed = M.v_steady(g)
+    ap = M.mixing_matrix(g)
+    # brute force: iterate the chain
+    v = np.full(g.n, 1.0 / g.n)
+    for _ in range(20000):
+        v = ap @ v
+        v /= v.sum()
+    assert np.abs(v - v_closed).max() < 1e-10
+
+
+def test_v_steady_norm_regular_graph_is_inverse_sqrt_n():
+    for n in (16, 64, 256):
+        g = T.random_k_regular(n, 8, seed=0)
+        assert np.isclose(M.v_steady_norm(g), 1.0 / np.sqrt(n), rtol=1e-12)
+
+
+def test_v_steady_scaling_exponents_match_paper_fig5():
+    """Homogeneous families: α = 1/2; heavy-tail: α < 1/2 (paper Fig. 5a,b)."""
+    ns = [128, 512, 2048]
+
+    def alpha(build):
+        vs = [M.v_steady_norm(build(n)) for n in ns]
+        return -np.polyfit(np.log(ns), np.log(vs), 1)[0]
+
+    a_kreg = alpha(lambda n: T.random_k_regular(n, 8, seed=0))
+    a_er = alpha(lambda n: T.erdos_renyi_gnm(n, 4 * n, seed=0))
+    a_ba = alpha(lambda n: T.barabasi_albert(n, 4, seed=0))
+    assert abs(a_kreg - 0.5) < 0.01
+    assert abs(a_er - 0.5) < 0.02
+    assert a_ba < 0.48  # heterogeneous centralities compress less
+
+
+def test_v_steady_norm_invariant_under_assortativity_rewiring():
+    """Paper Fig. 5(c): degree-preserving rewiring leaves ‖v_steady‖ fixed."""
+    g = T.erdos_renyi_gnp(128, 0.08, seed=5)
+    before = M.v_steady_norm(g)
+    for target in (-0.3, 0.3):
+        g2 = M.rewire_to_assortativity(g, target, steps=20000, seed=1)
+        assert abs(g2.degree_assortativity() - target) < 0.1
+        assert np.isclose(M.v_steady_norm(g2), before, rtol=1e-12)
+        assert np.array_equal(np.sort(g2.degrees), np.sort(g.degrees))
+
+
+def test_degree_sample_estimator_close_to_truth():
+    g = T.configuration_heavy_tail(512, 2.2, seed=7)
+    est = M.v_steady_norm_from_degree_sample(g.degrees, g.n)
+    assert np.isclose(est, M.v_steady_norm(g), rtol=1e-6)
+
+
+def test_spectral_gap_orders_mixing_speed():
+    """Expanders (k-regular) mix faster than rings (paper §4.5)."""
+    n = 64
+    gap_kreg = M.spectral_gap(T.random_k_regular(n, 8, seed=0))
+    gap_ring = M.spectral_gap(T.ring(n))
+    assert gap_kreg > 10 * gap_ring
+    t_kreg = M.mixing_time_estimate(T.random_k_regular(n, 8, seed=0))
+    t_ring = M.mixing_time_estimate(T.ring(n))
+    assert t_kreg < t_ring
+
+
+def test_directed_graph_power_iteration_path():
+    # strongly-connected directed cycle with an extra chord
+    n = 12
+    a = np.zeros((n, n), np.float32)
+    for i in range(n):
+        a[i, (i + 1) % n] = 1.0
+    a[0, 6] = 1.0
+    g = T.from_adjacency(a, directed=True)
+    v = M.v_steady(g)
+    assert np.isclose(v.sum(), 1.0)
+    ap = M.mixing_matrix(g)
+    assert np.allclose(ap @ v, v, atol=1e-9)

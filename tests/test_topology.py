@@ -1,0 +1,68 @@
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+
+
+@pytest.mark.parametrize(
+    "build,expected_degree",
+    [
+        (lambda: T.complete(16), 15),
+        (lambda: T.ring(12), 2),
+        (lambda: T.circulant(16, (1, 2)), 4),
+        (lambda: T.random_k_regular(32, 6, seed=0), 6),
+        (lambda: T.torus_lattice((4, 4)), 4),
+        (lambda: T.torus_lattice((3, 3, 3)), 6),
+    ],
+)
+def test_regular_families_have_exact_degree(build, expected_degree):
+    g = build()
+    assert g.is_connected()
+    assert np.all(g.degrees == expected_degree)
+
+
+def test_adjacency_is_symmetric_zero_diagonal():
+    for g in [T.erdos_renyi_gnp(64, 0.1, seed=1), T.barabasi_albert(64, 3, seed=1)]:
+        a = g.adjacency
+        assert np.allclose(a, a.T)
+        assert np.all(np.diag(a) == 0)
+
+
+def test_erdos_renyi_gnm_edge_count():
+    g = T.erdos_renyi_gnm(50, 120, seed=3)
+    assert g.n_edges == 120
+
+
+def test_barabasi_albert_mean_degree():
+    # BA(m): mean degree → 2m for large n
+    g = T.barabasi_albert(512, 4, seed=0)
+    assert abs(g.mean_degree - 8) < 0.5
+    # heavy tail: max degree far above mean
+    assert g.degrees.max() > 4 * g.mean_degree
+
+
+def test_configuration_heavy_tail_connected_and_powerlawish():
+    g = T.configuration_heavy_tail(256, 2.3, seed=0)
+    assert g.is_connected()
+    # erased configuration model: multi-edge/self-loop removal can shave a
+    # degree point off a few nodes — min k_min-1 is acceptable
+    assert g.degrees.min() >= 1
+    assert g.degrees.max() > 3 * g.mean_degree
+
+
+def test_star_matches_centralised_topology():
+    g = T.star(10)
+    assert g.degrees[0] == 9
+    assert np.all(g.degrees[1:] == 1)
+
+
+def test_seeded_determinism():
+    a1 = T.erdos_renyi_gnp(40, 0.15, seed=7).adjacency
+    a2 = T.erdos_renyi_gnp(40, 0.15, seed=7).adjacency
+    assert np.array_equal(a1, a2)
+
+
+def test_disconnected_rejected_or_flagged():
+    # p far below the connectivity threshold should raise after retries
+    with pytest.raises(RuntimeError):
+        T.erdos_renyi_gnp(200, 0.001, seed=0)

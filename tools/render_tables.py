@@ -1,0 +1,98 @@
+"""Render EXPERIMENTS.md tables from results/dryrun/*.json.
+
+Usage: PYTHONPATH=src python tools/render_tables.py [results/dryrun]
+Prints the §Dry-run and §Roofline markdown tables + memory notes.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if b < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}EB"
+
+
+def main() -> None:
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            recs.append((os.path.basename(f), json.load(fh)))
+
+    base = [
+        (n, r)
+        for n, r in recs
+        if not r.get("variant") and (r.get("mixing") in (None, "dense")) and "__rebase" not in n
+    ]
+    sp = [(n, r) for n, r in base if r["mesh"] == "pod16x16"]
+    mp = [(n, r) for n, r in base if r["mesh"] == "pod2x16x16"]
+
+    print("### §Dry-run summary\n")
+    print(f"single-pod combos: {len(sp)} ({sum(1 for _, r in sp if r['status']=='ok')} ok); "
+          f"multi-pod combos: {len(mp)} ({sum(1 for _, r in mp if r['status']=='ok')} ok)\n")
+    print("| arch | shape | mesh | compile | status | args/chip | temps/chip | fits v5e? |")
+    print("|---|---|---|---|---|---|---|---|")
+    for name, r in base:
+        mem = r.get("memory_analysis", {})
+        args_b = mem.get("argument_size_in_bytes", 0)
+        temp_b = mem.get("temp_size_in_bytes", 0)
+        tot = args_b + temp_b
+        fits = "yes" if tot and tot < HBM_PER_CHIP else ("NO" if tot else "?")
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('lower_compile_s','-')}s "
+            f"| {r['status']} | {fmt_bytes(args_b)} | {fmt_bytes(temp_b)} | {fits} |"
+        )
+
+    print("\n### §Roofline table (single-pod, per-chip, scan-corrected)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant | MODEL_FLOPS | useful |")
+    print("|---|---|---|---|---|---|---|---|")
+    for name, r in sp:
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — |")
+            continue
+        t = r["terms"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} | **{t['dominant']}** | {r['model_flops']:.2e} "
+            f"| {r['useful_flops_ratio']:.2f} |"
+        )
+
+    print("\n### Variant / optimised runs (§Perf)\n")
+    var = [(n, r) for n, r in recs if r.get("variant") or (r.get("mixing") not in (None, "dense"))]
+    if var:
+        print("| arch | shape | variant | compute_s | memory_s | collective_s | dominant |")
+        print("|---|---|---|---|---|---|---|")
+        for name, r in var:
+            tag = ";".join(f"{k}={v}" for k, v in (r.get("variant") or {}).items())
+            if r.get("mixing") not in (None, "dense"):
+                tag = (tag + ";" if tag else "") + f"mixing={r['mixing']}"
+            if r["status"] != "ok":
+                print(f"| {r['arch']} | {r['shape']} | {tag} | — | — | — | ERROR |")
+                continue
+            t = r["terms"]
+            print(
+                f"| {r['arch']} | {r['shape']} | {tag} | {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+                f"| {t['collective_s']:.2e} | {t['dominant']} |"
+            )
+
+    # memory notes
+    print("\n### Memory-fit notes\n")
+    for name, r in sp:
+        mem = r.get("memory_analysis", {})
+        tot = mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+        if tot > HBM_PER_CHIP:
+            print(f"* {r['arch']} × {r['shape']}: {fmt_bytes(tot)}/chip exceeds v5e 16 GB — "
+                  f"needs ≥{-(-tot // HBM_PER_CHIP):.0f}× more chips or sharper sharding/quantisation.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Re-splice the rendered dry-run/roofline tables into EXPERIMENTS.md.
+
+Replaces everything between the '### §Dry-run summary' marker (or the
+'<!-- DRYRUN_TABLE -->' placeholder) and the '## §Perf' heading with the
+fresh render from results/dryrun.  Idempotent.
+"""
+import subprocess
+import sys
+
+EXP = "/root/repo/EXPERIMENTS.md"
+
+render = subprocess.run(
+    [sys.executable, "tools/render_tables.py", "results/dryrun"],
+    capture_output=True, text=True, cwd="/root/repo",
+    env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+)
+tables = render.stdout
+assert "§Roofline table" in tables, render.stderr[-500:]
+
+exp = open(EXP).read()
+start_markers = ["### §Dry-run summary", "<!-- DRYRUN_TABLE -->"]
+start = -1
+for m in start_markers:
+    start = exp.find(m)
+    if start != -1:
+        break
+end = exp.find("## §Perf")
+assert start != -1 and end != -1 and start < end
+# keep the roofline §-preamble? The render includes its own headings; insert
+# the §Roofline prose header before its table.
+roof_preamble = """
+---
+
+## §Roofline (deliverable g)
+
+Terms per (arch × shape), single-pod mesh, per-chip: compute_s =
+HLO_FLOPs/197e12, memory_s = bytes_accessed/819e9, collective_s =
+Σ collective-operand-bytes/50e9; scan-corrected via unrolled small
+lowerings + constrained polynomial extrapolation (launch/roofline.py —
+see the caveats there and in DESIGN.md §10.1: memory terms are upper
+bounds; decode cache writes counted as full rewrites).
+MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (serve);
+useful = MODEL_FLOPS / (HLO_FLOPs × chips) — NOTE it does not count
+attention FLOPs, so long-context small-d_model combos read low by
+construction.
+
+"""
+sections = tables.split("### §Roofline table")
+dry_part = sections[0].strip()
+roof_part = "### §Roofline table" + sections[1]
+new = exp[:start] + dry_part + "\n" + roof_preamble + roof_part.strip() + "\n\n---\n\n" + exp[end:]
+open(EXP, "w").write(new)
+print("ok", len(new))
