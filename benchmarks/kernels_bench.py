@@ -9,12 +9,16 @@ interpret-mode allclose is re-verified per shape.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import topology as T
+from repro.core.commplan import BACKENDS, compile_plan
 from repro.kernels.flash.flash import flash_mha
 from repro.kernels.flash.ref import attention_ref
 from repro.kernels.mix.mix import mix_matmul
@@ -32,6 +36,77 @@ def _time(f, *args, iters=5):
         out = f(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / iters
+
+
+_MIX_FAMILIES = {
+    "ring": lambda n: T.ring(n),
+    "kreg": lambda n: T.random_k_regular(n, 4, seed=0),
+    "ba": lambda n: T.barabasi_albert(n, 4, seed=0),
+    "heavytail": lambda n: T.configuration_heavy_tail(n, 2.2, seed=0),
+}
+
+
+def run_mixing(
+    ns=(16, 64, 256, 1024),
+    d: int = 4096,
+    iters: int = 5,
+    out_path: str | pathlib.Path = "BENCH_mixing.json",
+) -> dict:
+    """Sweep the three CommPlan backends over n × topology family.
+
+    Times one jitted DecAvg round of an (n, d) node-stacked pytree per
+    backend and writes a throughput record to ``out_path``.  The headline
+    row is (ba, 1024): the dense path's O(n²·d) einsum against the sparse
+    path's O(E·d) gather-scatter — the crossover the CommPlan refactor
+    exists to exploit.  Reports best-of-``iters`` (min), the standard
+    noise-robust estimator on shared-CPU runners.
+    """
+
+    def _best_of(f, *args):
+        jax.block_until_ready(f(*args))  # compile + warm caches
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = f(*args)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    records = []
+    for family, build in _MIX_FAMILIES.items():
+        for n in ns:
+            g = build(n)
+            params = {"w": jax.random.normal(jax.random.PRNGKey(0), (n, d), jnp.float32)}
+            row: dict = {
+                "family": family,
+                "n": n,
+                "d": d,
+                "n_edges": g.n_edges,
+                "mean_degree": g.mean_degree,
+            }
+            for backend in BACKENDS:
+                plan = compile_plan(g, backend)
+                f = jax.jit(plan.mix)
+                sec = _best_of(f, params)
+                row[f"us_{backend}"] = sec * 1e6
+                emit(
+                    f"mixing.{backend}",
+                    sec * 1e6,
+                    f"family={family};n={n};d={d};bytes_moved~={'n*d*4' if backend == 'dense' else 'deg*d*4'}",
+                )
+            row["sparse_speedup_vs_dense"] = row["us_dense"] / row["us_sparse"]
+            row["ppermute_speedup_vs_dense"] = row["us_dense"] / row["us_ppermute"]
+            records.append(row)
+    result = {
+        "d": d,
+        "iters": iters,
+        "device": str(jax.devices()[0]),
+        "records": records,
+    }
+    path = pathlib.Path(out_path)
+    path.write_text(json.dumps(result, indent=2) + "\n")
+    print(f"wrote {path} ({len(records)} rows)", flush=True)
+    return result
 
 
 def run(quick: bool = True) -> None:
@@ -94,3 +169,4 @@ def run(quick: bool = True) -> None:
 
 if __name__ == "__main__":
     run()
+    run_mixing()

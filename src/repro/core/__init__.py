@@ -1,12 +1,15 @@
 """Core contribution of the paper: network-aware uncoordinated initialisation
 and DecAvg aggregation for decentralised federated learning."""
-from . import decavg, diffusion, gossip, initialisation, mixing, topology
+from . import commplan, decavg, diffusion, gossip, initialisation, mixing, topology
+from .commplan import BACKENDS, CommPlan, FailureModel, compile_plan
 from .decavg import (
     failure_receive_matrix,
     link_failure_mask,
     mix_array,
     mix_pytree,
     mix_pytree_circulant,
+    mix_pytree_colored,
+    mix_pytree_sparse,
     node_failure_mask,
 )
 from .diffusion import DiffusionResult, run_diffusion, sigma_ap_prediction

@@ -1,0 +1,347 @@
+"""CommPlan: compile a ``Graph`` into an executable mixing backend.
+
+The paper's dynamics depend only on the communication network's *structure*
+(eigenvector centralities, degrees, spectral gap), but how a round of DecAvg
+*executes* on hardware is a separate engineering choice.  ``compile_plan``
+makes that choice a config knob: it lowers a ``Graph`` (+ optional per-node
+data sizes + a failure model) into one of three interchangeable backends, all
+implementing Eq. 2 exactly (DESIGN.md §3):
+
+``dense``     the (n, n) receive-matrix einsum — reference semantics, any
+              topology, O(n²·d); the paper-faithful baseline.
+``sparse``    CSR/edge-list gather + ``segment_sum`` scatter — O(E·d), makes
+              n in the thousands tractable; ``repro.kernels.mix.sparse``
+              supplies the blocked block-sparse Pallas kernel for the TPU
+              rendering of the same contraction.
+``ppermute``  greedy edge colouring → each colour class is a matching = one
+              ``ppermute`` round inside ``shard_map``; moves degree·|w| bytes
+              per node instead of n·|w|.  Generalises the circulant-only
+              schedule to arbitrary static undirected graphs.
+
+Failure semantics are uniform across backends: one Bernoulli(link_p) draw per
+*undirected edge* (both endpoints agree by construction — the draw is keyed
+on the edge's index in ``Graph.edge_list()``) and one Bernoulli(node_p) per
+node; the effective receive operator renormalises over the surviving
+neighbourhood.  Identical keys therefore give identical effective operators
+on every backend, which is what the parity property tests assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .decavg import mix_pytree, mix_pytree_colored, mix_pytree_hyb, mix_pytree_sparse
+from .mixing import receive_matrix
+from .topology import Graph
+
+PyTree = Any
+
+__all__ = ["BACKENDS", "CommPlan", "FailureModel", "compile_plan"]
+
+BACKENDS = ("dense", "sparse", "ppermute")
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureModel:
+    """Per-round Bernoulli link/node survival probabilities (paper §4.1)."""
+
+    link_p: float = 1.0
+    node_p: float = 1.0
+
+    @property
+    def active(self) -> bool:
+        return self.link_p < 1.0 or self.node_p < 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """A compiled, backend-specific execution plan for one DecAvg round.
+
+    Produced by ``compile_plan``; all array fields are device arrays ready to
+    be closed over by a jitted round function.  ``mix(params, key)`` is the
+    single entry point every consumer dispatches through; ``key`` is required
+    iff ``failures.active``.
+    """
+
+    graph: Graph
+    backend: str
+    failures: FailureModel
+    data_sizes: np.ndarray | None
+    # ---- dense ----
+    receive: jax.Array | None = None  # (n, n) static row-stochastic operator
+    adjacency: jax.Array | None = None  # (n, n) original adjacency
+    edge_uid_matrix: jax.Array | None = None  # (n, n) int32 undirected edge ids
+    # ---- sparse (CSR receive order, dst-sorted) ----
+    src: jax.Array | None = None  # (nnz,) int32
+    dst: jax.Array | None = None  # (nnz,) int32
+    edge_uid: jax.Array | None = None  # (nnz,) int32 → undirected edge index
+    edge_w: jax.Array | None = None  # (nnz,) statically normalised weights
+    self_w: jax.Array | None = None  # (n,) statically normalised self weights
+    raw_edge_w: jax.Array | None = None  # (nnz,) unnormalised A[dst,src]·s[src]
+    raw_self_w: jax.Array | None = None  # (n,) unnormalised s
+    # ---- sparse HYB layout (static-topology fast path) ----
+    slot_idx: jax.Array | None = None  # (S, n) int32, self-padded
+    slot_w: jax.Array | None = None  # (S, n) statically normalised
+    hyb_self_w: jax.Array | None = None  # (n,), 0 at hub rows
+    hub_rows: jax.Array | None = None  # (H,) int32
+    hub_m: jax.Array | None = None  # (H, n) dense receive rows incl. self
+    # ---- ppermute / colored ----
+    partners: np.ndarray | None = None  # (n_colors, n) static int32
+    color_edge_uid: jax.Array | None = None  # (n_colors, n) int32, -1 unmatched
+    color_w: jax.Array | None = None  # (n_colors, n) statically normalised
+    color_raw_w: jax.Array | None = None  # (n_colors, n) unnormalised
+    n_edges: int = 0  # undirected edge count (failure draw width)
+
+    @property
+    def n(self) -> int:
+        return self.graph.n
+
+    @property
+    def n_colors(self) -> int:
+        return 0 if self.partners is None else self.partners.shape[0]
+
+    # ------------------------------------------------------------- execution
+    def mix(self, params: PyTree, key: jax.Array | None = None) -> PyTree:
+        """One DecAvg aggregation of a node-stacked pytree.
+
+        Jit-friendly: ``self`` is closed over as compile-time constants, only
+        ``params``/``key`` are traced.  The ``ppermute`` backend here executes
+        its colour schedule as node-axis gathers (single-process semantics);
+        use ``color_round_weights`` + ``decavg.mix_pytree_colored`` inside
+        ``shard_map`` for the true collective rendering (see launch/steps.py).
+        """
+        if self.failures.active and key is None:
+            raise ValueError("failure model active: mix() needs a PRNG key")
+        if self.backend == "dense":
+            return mix_pytree(self._dense_round_matrix(key), params)
+        if self.backend == "sparse":
+            if not self.failures.active and self.slot_idx is not None:
+                # static topology: HYB layout (ELL slot chain + dense hub
+                # rows) — the fused-gather rendering that beats the dense
+                # einsum on CPU.  Failure rounds renormalise per-edge, so
+                # they take the segment_sum formulation below.
+                return mix_pytree_hyb(
+                    params, self.slot_idx, self.slot_w, self.hyb_self_w,
+                    self.hub_rows, self.hub_m,
+                )
+            edge_w, self_w = self._sparse_round_weights(key)
+            return mix_pytree_sparse(
+                params, self.src, self.dst, edge_w, self_w, n_nodes=self.n
+            )
+        color_w, self_w = self.color_round_weights(key)
+        return mix_pytree_colored(params, self.partners, color_w, self_w)
+
+    # ----------------------------------------------------- per-round weights
+    def _edge_node_masks(self, key: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """(edge_keep (n_edges,), node_active (n,)) — shared across backends."""
+        k_link, k_node = jax.random.split(key)
+        if self.failures.link_p < 1.0:
+            edge_keep = (
+                jax.random.uniform(k_link, (max(self.n_edges, 1),))
+                < self.failures.link_p
+            )
+        else:
+            edge_keep = jnp.ones((max(self.n_edges, 1),), dtype=bool)
+        if self.failures.node_p < 1.0:
+            active = jax.random.bernoulli(k_node, self.failures.node_p, (self.n,))
+        else:
+            active = jnp.ones((self.n,), dtype=bool)
+        return edge_keep, active
+
+    def _dense_round_matrix(self, key: jax.Array | None) -> jax.Array:
+        if not self.failures.active:
+            return self.receive
+        edge_keep, active = self._edge_node_masks(key)
+        keep = edge_keep[self.edge_uid_matrix] & (self.adjacency > 0)
+        keep = keep & active[:, None] & active[None, :]
+        a = self.adjacency * keep
+        sizes = None if self.data_sizes is None else jnp.asarray(self.data_sizes, jnp.float32)
+        b = a.astype(jnp.float32) + jnp.eye(self.n, dtype=jnp.float32)
+        if sizes is not None:
+            b = b * sizes[None, :]
+        return b / b.sum(axis=1, keepdims=True)
+
+    def _sparse_round_weights(self, key: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+        if not self.failures.active:
+            return self.edge_w, self.self_w
+        edge_keep, active = self._edge_node_masks(key)
+        keep = edge_keep[self.edge_uid] & active[self.src] & active[self.dst]
+        num = self.raw_edge_w * keep
+        den = self.raw_self_w + jax.ops.segment_sum(
+            num, self.dst, num_segments=self.n, indices_are_sorted=True
+        )
+        return num / den[self.dst], self.raw_self_w / den
+
+    def color_round_weights(self, key: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+        """((n_colors, n), (n,)) normalised weights for this round's schedule."""
+        if not self.failures.active:
+            return self.color_w, self.self_w
+        edge_keep, active = self._edge_node_masks(key)
+        matched = self.color_edge_uid >= 0
+        keep = matched & edge_keep[jnp.clip(self.color_edge_uid, 0, None)]
+        partners = jnp.asarray(self.partners)
+        keep = keep & active[None, :] & jnp.take(active, partners)
+        num = self.color_raw_w * keep
+        den = self.raw_self_w + num.sum(axis=0)
+        return num / den[None, :], self.raw_self_w / den
+
+    def color_perms(self) -> list[list[tuple[int, int]]]:
+        """Static ppermute (src, dst) pair lists, one per colour class."""
+        perms = []
+        for c in range(self.n_colors):
+            p = self.partners[c]
+            perms.append([(i, int(p[i])) for i in range(self.n) if p[i] != i])
+        return perms
+
+    # ------------------------------------------------------------- plumbing
+    def with_options(
+        self,
+        *,
+        backend: str | None = None,
+        data_sizes: np.ndarray | None = None,
+        failures: FailureModel | None = None,
+    ) -> "CommPlan":
+        """Recompile this plan with some knobs replaced."""
+        return compile_plan(
+            self.graph,
+            backend=backend or self.backend,
+            data_sizes=self.data_sizes if data_sizes is None else data_sizes,
+            failures=failures or self.failures,
+        )
+
+
+def _hyb_layout(
+    graph: Graph,
+    indptr: np.ndarray,
+    src: np.ndarray,
+    raw_edge: np.ndarray,
+    s: np.ndarray,
+    den: np.ndarray,
+) -> dict:
+    """Compile the sparse backend's HYB layout (ELL slots + dense hub rows).
+
+    Degree-threshold heuristic: each ELL slot costs one fused full-length
+    gather pass over the (n, d) ensemble, each hub row one (1, n)·(n, d)
+    matmul row; measured on CPU a hub row costs about a sixth of a slot
+    pass, so minimise ``n_slots(t) + n_hub(t)/6`` over thresholds t.
+    Heavy-tail hubs land in the dense part (a complete graph compiles to
+    "all hub" = the dense einsum, which is indeed optimal there).
+    """
+    n = graph.n
+    deg = np.diff(indptr)
+    candidates = sorted(set(deg.tolist()) | {0})
+    cost = lambda t: min(t, int(deg[deg <= t].max()) if (deg <= t).any() else 0) + (deg > t).sum() / 6.0
+    t = min(candidates, key=cost)
+    hub = np.nonzero(deg > t)[0].astype(np.int32)
+    n_slots = int(deg[deg <= t].max()) if (deg <= t).any() else 0
+    slot_idx = np.tile(np.arange(n, dtype=np.int32)[None, :], (n_slots, 1))
+    slot_w = np.zeros((n_slots, n), np.float64)
+    is_hub = np.zeros(n, dtype=bool)
+    is_hub[hub] = True
+    for i in range(n):
+        if is_hub[i]:
+            continue
+        lo, hi = indptr[i], indptr[i + 1]
+        slot_idx[: hi - lo, i] = src[lo:hi]
+        slot_w[: hi - lo, i] = raw_edge[lo:hi] / den[i]
+    hub_m = np.zeros((len(hub), n), np.float64)
+    for r, i in enumerate(hub):
+        lo, hi = indptr[i], indptr[i + 1]
+        hub_m[r, src[lo:hi]] = raw_edge[lo:hi] / den[i]
+        hub_m[r, i] = s[i] / den[i]
+    return dict(
+        slot_idx=jnp.asarray(slot_idx),
+        slot_w=jnp.asarray(slot_w, jnp.float32),
+        hyb_self_w=jnp.asarray(np.where(is_hub, 0.0, s / den), jnp.float32),
+        hub_rows=jnp.asarray(hub),
+        hub_m=jnp.asarray(hub_m, jnp.float32),
+    )
+
+
+def compile_plan(
+    graph: Graph,
+    backend: str = "auto",
+    data_sizes: np.ndarray | Sequence[float] | None = None,
+    failures: FailureModel | None = None,
+) -> CommPlan:
+    """Lower a ``Graph`` into an executable ``CommPlan``.
+
+    backend="auto" picks dense for small ensembles (n ≤ 64, where the (n, n)
+    einsum is cheapest and GSPMD-friendliest) and sparse beyond — the
+    crossover the mixing benchmark sweep measures.
+    """
+    failures = failures or FailureModel()
+    if backend == "auto":
+        backend = "dense" if graph.n <= 64 else "sparse"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown mixing backend {backend!r}; expected one of {BACKENDS}")
+
+    sizes = None if data_sizes is None else np.asarray(data_sizes, dtype=np.float64)
+    n = graph.n
+    n_edges = len(graph.edge_list())
+    common = dict(
+        graph=graph,
+        backend=backend,
+        failures=failures,
+        data_sizes=None if sizes is None else sizes.copy(),
+        n_edges=n_edges,
+    )
+
+    if backend == "dense":
+        uid_matrix = np.zeros((n, n), dtype=np.int32)
+        edges = graph.edge_list()
+        if graph.directed:
+            uid_matrix[edges[:, 0], edges[:, 1]] = np.arange(len(edges))
+        else:
+            uid_matrix[edges[:, 0], edges[:, 1]] = np.arange(len(edges))
+            uid_matrix[edges[:, 1], edges[:, 0]] = np.arange(len(edges))
+        return CommPlan(
+            **common,
+            receive=jnp.asarray(receive_matrix(graph, sizes), jnp.float32),
+            adjacency=jnp.asarray(graph.adjacency),
+            edge_uid_matrix=jnp.asarray(uid_matrix),
+        )
+
+    s = np.ones(n, dtype=np.float64) if sizes is None else sizes
+    if backend == "sparse":
+        indptr, src, uid = graph.csr()
+        dst = np.repeat(np.arange(n, dtype=np.int32), np.diff(indptr))
+        raw_edge = graph.adjacency[dst, src].astype(np.float64) * s[src]
+        den = s + np.bincount(dst, weights=raw_edge, minlength=n)
+        return CommPlan(
+            **common,
+            src=jnp.asarray(src),
+            dst=jnp.asarray(dst),
+            edge_uid=jnp.asarray(uid),
+            edge_w=jnp.asarray(raw_edge / den[dst], jnp.float32),
+            self_w=jnp.asarray(s / den, jnp.float32),
+            raw_edge_w=jnp.asarray(raw_edge, jnp.float32),
+            raw_self_w=jnp.asarray(s, jnp.float32),
+            **_hyb_layout(graph, indptr, src, raw_edge, s, den),
+        )
+
+    # ppermute: greedy edge colouring → per-colour matchings
+    coloring = graph.edge_coloring()
+    partners = coloring.partners
+    idx = np.arange(n)
+    matched = partners != idx[None, :]
+    # receive weight of edge (i, partner) at node i: A[i, partner] * s[partner]
+    raw = np.where(
+        matched,
+        graph.adjacency[idx[None, :], partners] * s[partners],
+        0.0,
+    )
+    den = s + raw.sum(axis=0)
+    return CommPlan(
+        **common,
+        partners=partners,
+        color_edge_uid=jnp.asarray(coloring.edge_index),
+        color_w=jnp.asarray(raw / den[None, :], jnp.float32),
+        color_raw_w=jnp.asarray(raw, jnp.float32),
+        self_w=jnp.asarray(s / den, jnp.float32),
+        raw_self_w=jnp.asarray(s, jnp.float32),
+    )

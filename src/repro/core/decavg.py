@@ -1,7 +1,8 @@
 """DecAvg / "Decay" aggregation (paper Eq. 2) and its TPU renderings.
 
-Three implementations of the same operator, all consuming parameter pytrees
-with a leading node axis ``(n, ...)``:
+Execution backends of the same operator, all consuming parameter pytrees
+with a leading node axis ``(n, ...)`` (compiled and dispatched by
+``repro.core.commplan``, DESIGN.md §3):
 
 1. ``mix_pytree``            — dense ``w_new[i] = Σ_j M[i,j] w[j]`` einsum with
                                the receive matrix.  Reference semantics, works
@@ -10,18 +11,32 @@ with a leading node axis ``(n, ...)``:
                                XLA lowers the contraction to an all-gather of
                                the full parameter ensemble — the *paper-faithful
                                baseline* of the §Perf story.
-2. ``mix_pytree_circulant``  — for circulant topologies: k ``ppermute`` shifts
-                               + local weighted sum inside ``shard_map``.  Moves
-                               only degree·|w| bytes instead of n·|w| — the
-                               beyond-paper optimised collective schedule.
-3. Pallas kernel             — ``repro.kernels.mix`` provides the blocked
-                               (d × n)·(n × n) product for the dense form's
-                               on-chip hot-spot (see kernels/mix).
+2. ``mix_pytree_sparse``     — edge-list gather-scatter: gather each receive
+                               edge's source row, weight, ``segment_sum`` into
+                               the destination.  O(E·d) compute / bytes instead
+                               of O(n²·d) — the backend that makes n in the
+                               thousands tractable.  ``mix_pytree_hyb`` is the
+                               CPU-fast rendering of the same operator (ELL
+                               slot chain + dense hub rows); ``repro.kernels
+                               .mix`` additionally provides the blocked
+                               block-sparse Pallas kernel for the TPU hot-spot.
+3. ``mix_pytree_colored``    — edge-coloured collective schedule for *any*
+                               static undirected graph: each colour class is a
+                               matching, i.e. one ``ppermute`` round inside
+                               ``shard_map`` (generalises the circulant-only
+                               schedule).  Falls back to gather semantics when
+                               no mesh axis is given — same math, same
+                               schedule, single-process.
+4. ``mix_pytree_circulant``  — the original circulant-only ``ppermute`` shift
+                               schedule, kept for regular rings/tori where the
+                               offset structure is known a priori.
 
 Failure modelling (paper §4.1, Fig. 2): each *link* or *node* is active per
 round with probability p; inactive nodes still train locally but are
 momentarily isolated.  ``failure_receive_matrix`` rebuilds the round's
-effective row-stochastic operator.
+effective row-stochastic operator for the dense backend; the sparse/colored
+backends apply per-edge keep masks and renormalise via segment sums (see
+``commplan``).
 """
 from __future__ import annotations
 
@@ -37,6 +52,9 @@ from .topology import Graph
 __all__ = [
     "mix_pytree",
     "mix_array",
+    "mix_pytree_sparse",
+    "mix_pytree_hyb",
+    "mix_pytree_colored",
     "mix_pytree_circulant",
     "failure_receive_matrix",
     "link_failure_mask",
@@ -44,6 +62,11 @@ __all__ = [
 ]
 
 PyTree = Any
+
+
+def _bcast(w: jax.Array, ndim: int) -> jax.Array:
+    """Reshape a 1-D weight vector to broadcast over ``ndim - 1`` trailing dims."""
+    return w.reshape(w.shape + (1,) * (ndim - 1))
 
 
 def mix_array(m: jax.Array, x: jax.Array) -> jax.Array:
@@ -65,6 +88,129 @@ def mix_array(m: jax.Array, x: jax.Array) -> jax.Array:
 def mix_pytree(m: jax.Array, params: PyTree) -> PyTree:
     """DecAvg over every leaf of a node-stacked parameter pytree."""
     return jax.tree_util.tree_map(lambda w: mix_array(m, w), params)
+
+
+def mix_pytree_sparse(
+    params: PyTree,
+    src: jax.Array,
+    dst: jax.Array,
+    edge_w: jax.Array,
+    self_w: jax.Array,
+    *,
+    n_nodes: int,
+) -> PyTree:
+    """DecAvg via edge-list gather-scatter (CSR order, dst-sorted).
+
+    ``out[i] = self_w[i] * x[i] + Σ_{e: dst[e]=i} edge_w[e] * x[src[e]]``
+
+    Weights must already be normalised (rows of the effective receive matrix
+    sum to 1) — ``commplan`` precomputes them statically or renormalises per
+    round under failures.  fp32 accumulation for the same reason as
+    ``mix_array``.
+    """
+
+    def mix_leaf(x: jax.Array) -> jax.Array:
+        gathered = jnp.take(x, src, axis=0).astype(jnp.float32)
+        contrib = _bcast(edge_w, x.ndim) * gathered
+        agg = jax.ops.segment_sum(
+            contrib, dst, num_segments=n_nodes, indices_are_sorted=True
+        )
+        out = _bcast(self_w, x.ndim) * x.astype(jnp.float32) + agg
+        return out.astype(x.dtype)
+
+    return jax.tree_util.tree_map(mix_leaf, params)
+
+
+def mix_pytree_hyb(
+    params: PyTree,
+    slot_idx: jax.Array,
+    slot_w: jax.Array,
+    self_w: jax.Array,
+    hub_rows: jax.Array | None,
+    hub_m: jax.Array | None,
+) -> PyTree:
+    """DecAvg via the HYB (ELL + dense hub rows) sparse layout.
+
+    The CPU-fast rendering of the sparse backend: low-degree rows execute as
+    a chain of weighted full-length gathers (one per ELL slot — XLA fuses the
+    chain into a single pass, so S slots cost far less than one materialised
+    (nnz, d) gather), and the few heavy-tail hub rows as one small dense
+    (H, n) matmul.  ``slot_idx``/``slot_w`` are (S, n) — slot s holds node
+    i's s-th neighbour (self-index with weight 0 when exhausted or when i is
+    a hub row); ``hub_m`` holds the hubs' full receive rows including their
+    self weight.  Weights must be normalised.
+    """
+
+    def mix_leaf(x: jax.Array) -> jax.Array:
+        xf = x.astype(jnp.float32)
+        acc = _bcast(self_w, x.ndim) * xf
+        for s in range(slot_idx.shape[0]):
+            acc = acc + _bcast(slot_w[s], x.ndim) * jnp.take(xf, slot_idx[s], axis=0)
+        if hub_rows is not None and hub_rows.shape[0]:
+            hub_out = jnp.tensordot(
+                hub_m, xf, axes=[[1], [0]], preferred_element_type=jnp.float32
+            )
+            acc = acc.at[hub_rows].set(hub_out)
+        return acc.astype(x.dtype)
+
+    return jax.tree_util.tree_map(mix_leaf, params)
+
+
+def mix_pytree_colored(
+    params: PyTree,
+    partners: np.ndarray,
+    color_w: jax.Array,
+    self_w: jax.Array,
+    axis_name: str | Sequence[str] | None = None,
+) -> PyTree:
+    """DecAvg over an edge-coloured schedule (arbitrary undirected graphs).
+
+    partners: static (n_colors, n) int array — colour c's matching as an
+    involution (partners[c, i] == i when unmatched).  color_w: (n_colors, n)
+    receive weight of the edge (i, partners[c, i]) at node i (0 when
+    unmatched); self_w: (n,).  Weights must be normalised.
+
+    With ``axis_name`` set this must run inside ``shard_map`` with the node
+    axis sharded one node per device group: each colour class becomes one
+    ``ppermute`` (matchings are involutions, hence valid permutations), and
+    ``color_w`` / ``self_w`` must be passed as node-sharded operands (their
+    local shards).  Without ``axis_name`` the same schedule executes as
+    node-axis gathers — identical math, single process.
+    """
+    partners = np.asarray(partners)
+    n_colors, n = partners.shape
+
+    if axis_name is None:
+
+        def mix_leaf(x: jax.Array) -> jax.Array:
+            acc = _bcast(self_w, x.ndim) * x.astype(jnp.float32)
+            for c in range(n_colors):
+                shifted = jnp.take(x, jnp.asarray(partners[c]), axis=0)
+                acc = acc + _bcast(color_w[c], x.ndim) * shifted.astype(jnp.float32)
+            return acc.astype(x.dtype)
+
+        return jax.tree_util.tree_map(mix_leaf, params)
+
+    axis_size = jax.lax.psum(1, axis_name)
+    if axis_size != n:
+        raise ValueError(
+            f"colored ppermute schedule needs one node per device group: axis size {axis_size} != n {n}"
+        )
+    perms = [
+        [(i, int(partners[c, i])) for i in range(n) if partners[c, i] != i]
+        for c in range(n_colors)
+    ]
+
+    def mix_leaf_collective(x: jax.Array) -> jax.Array:
+        acc = _bcast(self_w, x.ndim) * x.astype(jnp.float32)
+        for c in range(n_colors):
+            if not perms[c]:
+                continue
+            shifted = jax.lax.ppermute(x, axis_name, perms[c])
+            acc = acc + _bcast(color_w[c], x.ndim) * shifted.astype(jnp.float32)
+        return acc.astype(x.dtype)
+
+    return jax.tree_util.tree_map(mix_leaf_collective, params)
 
 
 def mix_pytree_circulant(

@@ -65,15 +65,16 @@ def poll_degrees(graph: Graph, start: int, walk_length: int, n_walks: int, seed:
     distribution ``v_steady_norm_from_degree_sample`` expects.
     """
     rng = np.random.default_rng(seed)
-    a = graph.adjacency
-    samples: list[int] = []
-    for _ in range(n_walks):
-        v = start
-        for _ in range(walk_length):
-            nbrs = np.nonzero(a[v])[0]
-            v = int(rng.choice(nbrs))
-        samples.append(int(graph.degrees[v]))
-    ks = np.asarray(samples, dtype=np.float64)
+    # vectorised transition sampling: all walks advance one step per
+    # iteration through the CSR neighbour lists — O(walk_length) numpy ops
+    # instead of the O(n_walks · walk_length) Python loop.
+    indptr, indices, _ = graph.csr()
+    deg = (indptr[1:] - indptr[:-1]).astype(np.int64)
+    v = np.full(n_walks, start, dtype=np.int64)
+    for _ in range(walk_length):
+        u = rng.random(n_walks)
+        v = indices[indptr[v] + (u * deg[v]).astype(np.int64)]
+    ks = graph.degrees[v].astype(np.float64)
     if not correct_bias:
         return ks
     # importance resample ∝ 1/k to undo the stationary ∝ k visit bias

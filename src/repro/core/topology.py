@@ -5,11 +5,12 @@ Erdős–Rényi G(n,p)/G(n,m), Barabási–Albert preferential attachment,
 heavy-tail configuration models and lattices on d-dimensional tori.
 
 Graphs are built with numpy (seeded, deterministic) and exposed as a small
-``Graph`` value type carrying the dense adjacency matrix.  Dense is the right
-representation here: the FL node counts of interest (n <= a few thousand for
-the numerical model, n <= 64 for real-ANN runs, n = 16/32 for the production
-mesh) make an (n, n) float32 matrix trivially small, and the DecAvg
-aggregation consumes it as a mixing matrix directly.
+``Graph`` value type carrying the dense adjacency matrix.  The dense (n, n)
+float32 matrix stays the canonical *description* of the network (trivially
+small up to a few thousand nodes), but execution no longer has to consume it
+densely: ``Graph`` also exports cached CSR / edge-list / edge-colouring views
+that ``repro.core.commplan`` compiles into sparse gather-scatter and
+``ppermute`` mixing schedules (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -20,6 +21,7 @@ import numpy as np
 
 __all__ = [
     "Graph",
+    "EdgeColoring",
     "complete",
     "ring",
     "circulant",
@@ -32,6 +34,27 @@ __all__ = [
     "star",
     "from_adjacency",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeColoring:
+    """A proper edge colouring as per-colour perfect partial matchings.
+
+    Each colour class is a set of vertex-disjoint edges, i.e. an involution on
+    the node set: ``partners[c, i]`` is i's partner under colour c (or i itself
+    when i is unmatched in that colour).  ``edge_index[c, i]`` is the index of
+    edge (i, partners[c, i]) in ``Graph.edge_list()`` (-1 when unmatched) —
+    the hook failure models use to draw one Bernoulli per *edge* and have both
+    endpoints agree on it.  Because each colour is a matching, one colour =
+    one ``ppermute`` round on a node-sharded mesh (DESIGN.md §3.3).
+    """
+
+    partners: np.ndarray  # (n_colors, n) int32
+    edge_index: np.ndarray  # (n_colors, n) int32, -1 where unmatched
+
+    @property
+    def n_colors(self) -> int:
+        return self.partners.shape[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +73,7 @@ class Graph:
             raise ValueError("adjacency must have a zero diagonal (self-loops are added by the mixing matrix)")
         if not self.directed and not np.allclose(a, a.T):
             raise ValueError("undirected graph must have a symmetric adjacency matrix")
+        object.__setattr__(self, "_export_cache", {})
 
     @property
     def n(self) -> int:
@@ -86,6 +110,98 @@ class Graph:
             seen |= nxt
             frontier = nxt
         return bool(seen.all())
+
+    # ---- execution-backend exports (cached; consumed by core.commplan) ----
+    def edge_list(self) -> np.ndarray:
+        """(m, 2) int32 array of edges.
+
+        Undirected graphs list each edge once with i < j; directed graphs
+        list every (src, dst) arc.  Order is deterministic (row-major scan of
+        the adjacency), so edge indices are stable identifiers — the failure
+        model keys its per-edge Bernoulli draws on them.
+        """
+        return self._cached("edge_list", self._build_edge_list)
+
+    def csr(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """CSR view of the *receive* pattern: (indptr, indices, edge_uid).
+
+        Row i lists the in-neighbours j with A[i, j] != 0 (for undirected
+        graphs that is simply the neighbourhood).  ``edge_uid[e]`` maps the
+        e-th CSR entry back to its row in ``edge_list()`` so both directions
+        of an undirected edge share one failure draw.
+        """
+        return self._cached("csr", self._build_csr)
+
+    def edge_coloring(self) -> EdgeColoring:
+        """Greedy proper edge colouring (≤ 2Δ-1 colours; Δ or Δ+1 typical).
+
+        Edges are coloured in descending order of endpoint-degree sum — the
+        classical greedy order that keeps the colour count near Vizing's Δ+1
+        bound on the heavy-tail graphs where naive order is worst.
+        Undirected graphs only: a colour class must be a matching to be a
+        valid ``ppermute`` round.
+        """
+        if self.directed:
+            raise ValueError("edge colouring (ppermute scheduling) requires an undirected graph")
+        return self._cached("edge_coloring", self._build_edge_coloring)
+
+    def _cached(self, key: str, build):
+        cache = self._export_cache
+        if key not in cache:
+            cache[key] = build()
+        return cache[key]
+
+    def _build_edge_list(self) -> np.ndarray:
+        a = self.adjacency
+        if self.directed:
+            i, j = np.nonzero(a)
+        else:
+            i, j = np.nonzero(np.triu(a, k=1))
+        return np.stack([i, j], axis=1).astype(np.int32)
+
+    def _build_csr(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        edges = self.edge_list()
+        n = self.n
+        if self.directed:
+            # A[i, j] != 0 means "i receives from j" (receive_matrix, Eq. 2):
+            # row i's CSR entries are exactly row i's adjacency nonzeros
+            dst, src = edges[:, 0], edges[:, 1]
+            uid = np.arange(len(edges), dtype=np.int32)
+        else:
+            dst = np.concatenate([edges[:, 0], edges[:, 1]])
+            src = np.concatenate([edges[:, 1], edges[:, 0]])
+            uid = np.concatenate([np.arange(len(edges), dtype=np.int32)] * 2)
+        order = np.lexsort((src, dst))
+        dst, src, uid = dst[order], src[order], uid[order]
+        indptr = np.zeros(n + 1, dtype=np.int32)
+        np.add.at(indptr, dst + 1, 1)
+        indptr = np.cumsum(indptr).astype(np.int32)
+        return indptr, src.astype(np.int32), uid.astype(np.int32)
+
+    def _build_edge_coloring(self) -> EdgeColoring:
+        edges = self.edge_list()
+        k = self.adjacency.astype(bool).sum(axis=1)
+        order = np.argsort(-(k[edges[:, 0]] + k[edges[:, 1]]), kind="stable")
+        node_colors: list[set[int]] = [set() for _ in range(self.n)]
+        colors: list[list[tuple[int, int, int]]] = []
+        for e in order:
+            u, v = int(edges[e, 0]), int(edges[e, 1])
+            c = 0
+            used = node_colors[u] | node_colors[v]
+            while c in used:
+                c += 1
+            if c == len(colors):
+                colors.append([])
+            colors[c].append((u, v, int(e)))
+            node_colors[u].add(c)
+            node_colors[v].add(c)
+        partners = np.tile(np.arange(self.n, dtype=np.int32), (len(colors), 1))
+        edge_index = np.full((len(colors), self.n), -1, dtype=np.int32)
+        for c, cls in enumerate(colors):
+            for u, v, e in cls:
+                partners[c, u], partners[c, v] = v, u
+                edge_index[c, u] = edge_index[c, v] = e
+        return EdgeColoring(partners=partners, edge_index=edge_index)
 
     def degree_assortativity(self) -> float:
         """Pearson correlation of degrees at either end of an edge."""

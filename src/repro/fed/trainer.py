@@ -26,9 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.decavg import failure_receive_matrix, mix_pytree
+from repro.core.commplan import CommPlan, FailureModel, compile_plan
 from repro.core.initialisation import InitConfig
-from repro.core.mixing import receive_matrix
 from repro.core.topology import Graph
 from repro.optim import Optimizer
 
@@ -87,7 +86,7 @@ def _local_steps(
 def make_round_fn(
     loss_fn: LossFn,
     optimizer: Optimizer,
-    graph: Graph,
+    plan: CommPlan | Graph,
     data_sizes: np.ndarray | None = None,
     link_p: float = 1.0,
     node_p: float = 1.0,
@@ -96,35 +95,34 @@ def make_round_fn(
 ):
     """Build the jittable communication-round function.
 
+    ``plan`` is a compiled ``CommPlan`` (``core.commplan.compile_plan``); a
+    raw ``Graph`` is accepted for convenience and compiled with the "auto"
+    backend.  ``data_sizes``/``link_p``/``node_p`` override the plan's own
+    settings when given (the plan is recompiled, cheap and host-side).
+
     Returns ``round_fn(state, node_batches) -> (state, metrics)`` where
     ``node_batches`` leaves are (n_nodes, b, batch, ...): b local minibatches
     per node per round (Appendix A: b = 8).
     """
-    adjacency = jnp.asarray(graph.adjacency)
-    static_m = jnp.asarray(receive_matrix(graph, data_sizes), jnp.float32)
-    sizes = None if data_sizes is None else jnp.asarray(data_sizes, jnp.float32)
+    failures = FailureModel(link_p=link_p, node_p=node_p)
+    if isinstance(plan, Graph):
+        plan = compile_plan(plan, backend="auto", data_sizes=data_sizes, failures=failures)
+    elif failures.active or data_sizes is not None:
+        # override only the knobs actually given: data_sizes alone must not
+        # silently replace the plan's own failure model with the inactive one
+        plan = plan.with_options(
+            data_sizes=data_sizes, failures=failures if failures.active else None
+        )
 
     def round_fn(state: DFLState, node_batches: Any) -> tuple[DFLState, dict]:
-        rng, k_link, k_node = jax.random.split(state.rng, 3)
+        rng, k_mix = jax.random.split(state.rng)
 
         params, opt_state, losses = jax.vmap(
             partial(_local_steps, loss_fn, optimizer)
         )(state.params, state.opt_state, node_batches)
 
         if aggregate:
-            if link_p < 1.0 or node_p < 1.0:
-                a = adjacency
-                if link_p < 1.0:
-                    u = jax.random.uniform(k_link, a.shape)
-                    keep = jnp.triu(u < link_p, k=1)
-                    a = a * (keep | keep.T)
-                if node_p < 1.0:
-                    active = jax.random.bernoulli(k_node, node_p, (a.shape[0],))
-                    a = a * (active[:, None] & active[None, :])
-                m = failure_receive_matrix(a, sizes)
-            else:
-                m = static_m
-            params = mix_pytree(m, params)
+            params = plan.mix(params, key=k_mix if plan.failures.active else None)
             if reinit_opt:  # Algorithm 1 line 15
                 opt_state = jax.vmap(optimizer.init)(params)
 

@@ -1,2 +1,3 @@
 from .ops import decavg_mix
 from .ref import decavg_mix_ref
+from .sparse import bsr_from_dense, mix_bsr

@@ -1,9 +1,11 @@
-"""Jit'd public wrapper for the DecAvg mixing kernel.
+"""Jit'd public wrappers for the DecAvg mixing kernels.
 
 ``decavg_mix(m, tree)`` mixes a whole node-stacked parameter pytree: leaves
 are flattened per node, concatenated, pushed through the blocked kernel and
 split back — one big MXU-friendly (n, d_total) product instead of hundreds
-of skinny ones.
+of skinny ones.  ``backend="sparse"`` routes the same product through the
+block-sparse kernel (BSR lowering of M happens once per distinct operator,
+cached on its numpy bytes).
 """
 from __future__ import annotations
 
@@ -11,23 +13,56 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .mix import mix_matmul
+from .sparse import bsr_from_dense, mix_bsr
 
 PyTree = Any
 
 __all__ = ["decavg_mix"]
 
+_BSR_CACHE: dict[tuple[bytes, int], tuple[jax.Array, jax.Array]] = {}
 
-def decavg_mix(m: jax.Array, params: PyTree, *, interpret: bool = False) -> PyTree:
+
+def _bsr_of(m: np.ndarray, block_n: int) -> tuple[jax.Array, jax.Array]:
+    key = (m.tobytes(), block_n)
+    if key not in _BSR_CACHE:
+        bc, tiles = bsr_from_dense(m, block_n)
+        _BSR_CACHE[key] = (jnp.asarray(bc), jnp.asarray(tiles))
+        if len(_BSR_CACHE) > 64:  # bound the static-operator cache
+            _BSR_CACHE.pop(next(iter(_BSR_CACHE)))
+    return _BSR_CACHE[key]
+
+
+def decavg_mix(
+    m: jax.Array,
+    params: PyTree,
+    *,
+    backend: str = "dense",
+    block_n: int = 128,
+    interpret: bool = False,
+) -> PyTree:
     """Apply ``w_new[i] = Σ_j M[i,j] w[j]`` to every leaf of a node-stacked
-    pytree via the Pallas kernel.  Leaves must share the leading node dim."""
+    pytree via the Pallas kernels.  Leaves must share the leading node dim.
+
+    backend="dense" runs the blocked dense kernel; "sparse" lowers M to BSR
+    once (requires a concrete, non-traced M — the static-topology case) and
+    runs the block-sparse kernel.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(params)
     import math
 
     n = leaves[0].shape[0]
     shapes = [l.shape for l in leaves]
     sizes = [math.prod(s[1:]) for s in shapes]
+    if backend == "sparse":
+        bc, tiles = _bsr_of(np.asarray(m, np.float32), block_n)
+        run = lambda flat: mix_bsr(bc, tiles, flat, interpret=interpret)
+    elif backend == "dense":
+        run = lambda flat: mix_matmul(m.astype(jnp.float32), flat, interpret=interpret)
+    else:
+        raise ValueError(f"unknown kernel backend {backend!r}")
     # group by dtype so concatenation is valid; mix each group
     out_leaves: list = [None] * len(leaves)
     by_dtype: dict = {}
@@ -35,7 +70,7 @@ def decavg_mix(m: jax.Array, params: PyTree, *, interpret: bool = False) -> PyTr
         by_dtype.setdefault(l.dtype, []).append(idx)
     for dt, idxs in by_dtype.items():
         flat = jnp.concatenate([leaves[i].reshape(n, -1) for i in idxs], axis=1)
-        mixed = mix_matmul(m.astype(jnp.float32), flat, interpret=interpret)
+        mixed = run(flat)
         off = 0
         for i in idxs:
             sz = sizes[i]

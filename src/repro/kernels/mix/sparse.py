@@ -1,0 +1,120 @@
+"""Pallas TPU kernel for blocked *sparse* DecAvg mixing  Y = M · W, M sparse.
+
+The sparse backend's XLA rendering (gather + ``segment_sum``) moves degree·d
+bytes but scatters row-by-row on the VPU.  On TPU the same contraction wants
+the MXU, so we lower M to *block*-sparse form (BSR): partition the (n, n)
+receive operator into (block_n × block_n) tiles, keep only tiles with any
+nonzero, and walk each row-block's tile list with a scalar-prefetched index
+map — the W row-block to load is data-dependent, which is exactly what
+``PrefetchScalarGridSpec`` exists for (DESIGN.md §9).
+
+Grid: (n_row_blocks, d_blocks, max_tiles_per_row_block); the K loop is
+innermost so the fp32 VMEM accumulator lives across it.  Row blocks with
+fewer tiles than the max are padded with all-zero tiles pointing at column
+block 0 — harmless extra MXU work, no branching.  For the paper's sparse
+families (E = O(n)) the tile count per row block is O(1) at production block
+sizes, so compute drops from O(n²·d) to O(n·d) like the gather path but at
+MXU rates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["bsr_from_dense", "mix_bsr"]
+
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_D = 512
+
+
+def bsr_from_dense(m: np.ndarray, block_n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Lower a dense (n, n) operator to padded BSR tiles.
+
+    Returns (block_cols (nrb, max_nnz) int32, tiles (nrb, max_nnz, bn, bn)
+    float32).  Rows are padded to the densest row-block with zero tiles at
+    column-block 0.  Pure numpy — runs once at plan-compile time, not per
+    round.
+    """
+    m = np.asarray(m, dtype=np.float32)
+    n = m.shape[0]
+    bn = block_n
+    n_pad = -n % bn
+    if n_pad:
+        m = np.pad(m, ((0, n_pad), (0, n_pad)))
+    nb = m.shape[0] // bn
+    tiles4 = m.reshape(nb, bn, nb, bn).transpose(0, 2, 1, 3)  # (nrb, ncb, bn, bn)
+    nonzero = np.abs(tiles4).sum(axis=(2, 3)) > 0
+    max_nnz = max(int(nonzero.sum(axis=1).max()), 1)
+    block_cols = np.zeros((nb, max_nnz), dtype=np.int32)
+    tiles = np.zeros((nb, max_nnz, bn, bn), dtype=np.float32)
+    for i in range(nb):
+        cols = np.nonzero(nonzero[i])[0]
+        block_cols[i, : len(cols)] = cols
+        tiles[i, : len(cols)] = tiles4[i, cols]
+    return block_cols, tiles
+
+
+def _mix_bsr_kernel(bc_ref, m_ref, w_ref, o_ref, acc_ref):
+    """One (i, j, k) grid step: acc[i, j] += tiles[i, k] @ W[bc[i, k], j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        m_ref[0, 0].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def mix_bsr(
+    block_cols: jax.Array,
+    tiles: jax.Array,
+    w: jax.Array,
+    *,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y = M @ W from the BSR form of M; W is (n, d) node-major params.
+
+    ``block_cols``/``tiles`` come from ``bsr_from_dense``; block_n is read off
+    the tile shape.  Output rows beyond n (BSR row padding) are sliced away
+    by the caller — the padded tiles are zero so they contribute nothing.
+    """
+    nrb, max_nnz, bn, _ = tiles.shape
+    n, d = w.shape
+    bd = min(block_d, pl.next_power_of_2(d))
+    n_pad = nrb * bn - n
+    d_pad = -d % bd
+    wp = jnp.pad(w, ((0, n_pad), (0, d_pad)))
+    dp_ = d + d_pad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nrb, dp_ // bd, max_nnz),
+        in_specs=[
+            pl.BlockSpec((1, 1, bn, bn), lambda i, j, k, bc: (i, k, 0, 0)),
+            pl.BlockSpec((bn, bd), lambda i, j, k, bc: (bc[i, k], j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bd), lambda i, j, k, bc: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bn, bd), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _mix_bsr_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrb * bn, dp_), w.dtype),
+        interpret=interpret,
+    )(block_cols, tiles, wp)
+    return out[:n, :d]

@@ -26,7 +26,7 @@ from repro.configs.base import ArchConfig
 
 PyTree = Any
 
-__all__ = ["param_pspecs", "with_node_axis", "cache_pspecs", "shardings_for"]
+__all__ = ["param_pspecs", "with_node_axis", "cache_pspecs", "commplan_in_specs", "shardings_for"]
 
 _MODEL = "model"
 
@@ -147,6 +147,24 @@ def with_node_axis(specs: PyTree, node_ax) -> PyTree:
         return P(ax, *tuple(s))
 
     return jax.tree_util.tree_map(add, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def commplan_in_specs(backend: str, node_ax) -> tuple[P, ...]:
+    """PartitionSpecs for a ``CommPlan``'s explicit operands (DESIGN.md §8).
+
+    Only the ppermute backend passes operands into ``shard_map`` — the
+    (n_colors, n) colour weights and (n,) self weights shard along the node
+    axis so each node group reads just its own column of the schedule.  The
+    dense receive matrix and the sparse edge arrays are closed over as jit
+    constants instead: they index the *global* node axis, and GSPMD
+    replicates them (inserting the node-axis all-gather the dense baseline
+    is defined by), so they have no explicit operand specs.
+    """
+    if backend != "ppermute":
+        return ()
+    ax = tuple(node_ax) if isinstance(node_ax, (tuple, list)) else (node_ax,)
+    ax = ax if len(ax) > 1 else ax[0]
+    return (P(None, ax), P(ax))
 
 
 def cache_pspecs(cache: PyTree, cfg: ArchConfig, mesh, *, batch_axis: str | None, seq_axis: str | None) -> PyTree:

@@ -10,14 +10,19 @@ and a mesh, build
 
 Training = one DFL communication round on the production mesh: every FL node
 (= one ``data``-axis slice) takes ``local_batches`` gradient steps, then the
-ensemble aggregates.  Aggregation schedules:
+ensemble aggregates through a compiled ``CommPlan`` (DESIGN.md §3):
 
     mixing="dense"      paper-faithful general-graph DecAvg — einsum with
                         the (n, n) receive matrix; GSPMD renders the node-axis
                         contraction as all-gather + local reduce.
-    mixing="circulant"  beyond-paper optimised schedule for circulant
-                        topologies — 2·|offsets| collective_permutes inside
-                        shard_map, moving degree·|w| instead of n·|w| bytes.
+    mixing="sparse"     edge-list gather + segment_sum — O(E·d) compute,
+                        the large-n backend.
+    mixing="ppermute"   edge-coloured collective schedule — one ppermute per
+                        colour class inside shard_map, moving degree·|w|
+                        instead of n·|w| bytes.  Works for ANY static
+                        undirected graph; "circulant" is kept as an alias
+                        (the production graph is circulant, for which the
+                        colouring recovers the offset schedule).
 
 Serving = consensus model; decode is ONE token against a cache of seq_len.
 """
@@ -25,7 +30,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -35,13 +39,18 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import topology
-from repro.core.decavg import mix_pytree, mix_pytree_circulant
+from repro.core.commplan import compile_plan
+from repro.core.decavg import mix_pytree_colored
 from repro.core.initialisation import InitConfig, gain_from_graph
-from repro.core.mixing import receive_matrix
 from repro.models import transformer as tfm
 from repro.optim import Optimizer, sgd
 from . import shardings as shard_rules
 from .mesh import n_fl_nodes, node_axis
+
+try:  # jax >= 0.5 exposes shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 PyTree = Any
 
@@ -105,7 +114,9 @@ def build_train_step(
     graph = topology.circulant(n, CIRCULANT_OFFSETS) if n >= 5 else topology.complete(n)
     gain = gain_from_graph(graph)
     opt = optimizer or sgd(1e-3, 0.5)
-    m_recv = jnp.asarray(receive_matrix(graph), jnp.float32)
+    if mixing == "circulant":  # back-compat alias: colouring ≡ offset schedule
+        mixing = "ppermute"
+    plan = compile_plan(graph, backend=mixing)
 
     def loss_fn(params: PyTree, batch: dict) -> jax.Array:
         fe = batch.get("frontend")
@@ -136,22 +147,22 @@ def build_train_step(
 
     def step(params, opt_state, batch):
         params, opt_state, loss = jax.vmap(local_steps)(params, opt_state, batch)
-        if mixing == "dense":
-            params = mix_pytree(m_recv, params)
-        elif mixing == "circulant":
-            mix = jax.shard_map(
-                partial(
-                    mix_pytree_circulant,
-                    offsets=CIRCULANT_OFFSETS,
-                    axis_name=node_ax if len(node_ax) > 1 else node_ax[0],
-                ),
+        if plan.backend in ("dense", "sparse"):
+            # GSPMD handles both: dense = node-axis all-gather + local
+            # contraction, sparse = gather/segment_sum over the node axis
+            params = plan.mix(params)
+        elif plan.backend == "ppermute":
+            ax = node_ax if len(node_ax) > 1 else node_ax[0]
+            mix_specs = shard_rules.commplan_in_specs(plan.backend, node_ax)
+            mix = _shard_map(
+                lambda p, cw, sw: mix_pytree_colored(p, plan.partners, cw, sw, axis_name=ax),
                 mesh=mesh,
-                in_specs=(node_pspecs,),
+                in_specs=(node_pspecs, *mix_specs),
                 out_specs=node_pspecs,
             )
-            params = mix(params)
+            params = mix(params, plan.color_w, plan.self_w)
         else:
-            raise ValueError(mixing)
+            raise ValueError(plan.backend)
         opt_state = jax.vmap(opt.init)(params)  # Algorithm 1 line 15
         return params, opt_state, loss.mean()
     per_node = SHAPES["train_4k"].global_batch // n

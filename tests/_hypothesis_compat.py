@@ -1,0 +1,82 @@
+"""Use real hypothesis when installed; degrade to a deterministic sampler when not.
+
+The dev environment (``pip install -e .[dev]``, see pyproject.toml) gets the
+real library.  Hermetic containers without it still COLLECT and RUN every
+property test: the fallback draws ``max_examples`` pseudo-random examples
+from each strategy with a fixed seed — strictly weaker than hypothesis (no
+shrinking, no example database) but the same assertions on the same
+distributions, and deterministic across runs.
+
+Test modules import from here instead of from ``hypothesis`` directly::
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def settings(max_examples=10, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 10)
+                for i in range(n):
+                    rng = np.random.default_rng(0xDF1 + i)
+                    drawn = {k: s.example(rng) for k, s in strats.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:  # surface the failing example
+                        raise AssertionError(
+                            f"falsifying example ({i + 1}/{n}): {drawn!r}"
+                        ) from e
+
+            # hide the strategy-bound params from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(
+                parameters=[p for k, p in sig.parameters.items() if k not in strats]
+            )
+            return wrapper
+
+        return deco

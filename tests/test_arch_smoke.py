@@ -47,6 +47,7 @@ def test_forward_shapes_and_finite(arch):
     assert bool(jnp.isfinite(logits).all())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_one_train_step_no_nans(arch):
     cfg = get_reduced_config(arch)

@@ -1,5 +1,5 @@
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.data import (
     make_token_stream,

@@ -14,6 +14,7 @@ from repro.models import transformer as TF
 CASES = ["gemma3_4b", "jamba_1p5_large_398b", "rwkv6_3b", "qwen2p5_3b", "granite_moe_1b_a400m", "musicgen_large"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", CASES)
 def test_decode_matches_prefill(arch):
     cfg = dataclasses.replace(get_reduced_config(arch), capacity_factor=8.0)
@@ -33,6 +34,7 @@ def test_decode_matches_prefill(arch):
     assert err < 5e-4, err
 
 
+@pytest.mark.slow
 def test_swa_ring_buffer_beyond_window():
     """Decode past the sliding window: ring buffer must evict correctly."""
     cfg = get_reduced_config("gemma3_4b")  # window 16

@@ -43,10 +43,15 @@ def test_stabilisation_faster_on_expander_than_ring():
 
 
 def test_noise_free_diffusion_matches_markov_power():
-    """W_t = W_0 A'^t exactly when σ_noise = 0 (§4.3)."""
+    """W_t = W_0 A'^t exactly when σ_noise = 0 (§4.3).
+
+    d must be large enough that the sample std over a node's d parameters
+    concentrates: the prediction is an expectation, and at d=64 its sampling
+    noise (~1/√(2d) ≈ 9%) exceeds the tolerance — the seed suite's failure.
+    """
     import jax, jax.numpy as jnp
     g = T.random_k_regular(32, 4, seed=2)
-    res = D.run_diffusion(g, d=64, sigma_noise=0.0, rounds=50, seed=2)
+    res = D.run_diffusion(g, d=1024, sigma_noise=0.0, rounds=50, seed=2)
     m = M.receive_matrix(g)
     # closed-form σ_ap after t rounds ≈ σ_init ‖rows of M^t‖ ... check the limit
     assert np.isclose(res.sigma_ap[-1], res.sigma_ap_prediction, rtol=0.08)

@@ -31,6 +31,7 @@ def _batches(xs, ys, b_local=2, bs=16, seed=0):
         )
 
 
+@pytest.mark.slow
 def test_corrected_init_escapes_plateau_uncorrected_stalls():
     """The paper's Fig. 1 phenomenon — needs n and model large enough that
     the √n compression actually stalls the He baseline (n = 16, the paper's

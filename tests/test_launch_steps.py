@@ -59,6 +59,20 @@ _SCRIPT = textwrap.dedent(
         assert np.isfinite(float(loss)), loss
         print("TRAIN_OK", float(loss))
 
+        # --- sparse / ppermute CommPlan backends: run + parity vs dense ---
+        for backend in ("sparse", "ppermute"):
+            step_b, args_b, in_b, out_b = steps_mod.build_train_step(cfg, mesh, mixing=backend)
+            fnb = jax.jit(step_b, in_shardings=in_b, out_shardings=out_b)
+            p3, o3, loss_b = fnb(params, opt_state, batch)
+            assert np.isfinite(float(loss_b)), (backend, loss_b)
+            assert np.isclose(float(loss_b), float(loss), rtol=1e-4), (backend, loss_b, loss)
+            err = max(
+                float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+                for a, b in zip(jax.tree_util.tree_leaves(p2), jax.tree_util.tree_leaves(p3))
+            )
+            assert err < 5e-3, (backend, err)
+            print(backend.upper() + "_OK", err)
+
         # --- decode step ---
         step_d, args_d, in_d, out_d = steps_mod.build_decode_step(cfg, mesh, shape_name="decode_32k")
         fnd = jax.jit(step_d, in_shardings=in_d, out_shardings=out_d)
@@ -72,6 +86,7 @@ _SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.slow
 def test_train_and_decode_steps_run_on_small_mesh():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -80,3 +95,4 @@ def test_train_and_decode_steps_run_on_small_mesh():
     )
     assert out.returncode == 0, out.stderr[-3000:]
     assert "TRAIN_OK" in out.stdout and "DECODE_OK" in out.stdout
+    assert "SPARSE_OK" in out.stdout and "PPERMUTE_OK" in out.stdout

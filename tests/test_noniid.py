@@ -12,6 +12,7 @@ from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
 from repro.optim import sgd
 
 
+@pytest.mark.slow
 def test_zipf_noniid_training_still_benefits_from_correction():
     """Paper cfg B uses Zipf α=1.8 non-iid data (on a BA graph): the
     gain-corrected init must still beat plain He under label skew."""

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+pytestmark = pytest.mark.slow  # jit-heavy, excluded from tier-1
+
 from repro.configs import get_reduced_config
 from repro.core import topology as T
 from repro.core.initialisation import InitConfig, gain_from_graph
