@@ -14,8 +14,16 @@ import numpy as np
 
 from repro.core import topology as T
 from repro.core.initialisation import InitConfig, gain_from_graph
-from repro.data import mnist_like, node_batch_iterator, node_datasets
-from repro.fed import init_fl_state, make_eval_fn, make_round_fn, train_loop
+from repro.data import batch_index_schedule, mnist_like, node_batch_iterator, node_datasets
+from repro.fed import (
+    init_fl_state,
+    make_eval_fn,
+    make_round_fn,
+    run_sweep,
+    run_trajectory,
+    stack_states,
+    train_loop,
+)
 from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
 from repro.optim import adamw, sgd
 
@@ -26,6 +34,20 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def _mlp_setup(n_nodes, graph, per_node, hidden, optimizer, seed, test_size):
+    """Shared dataset/model/optimizer setup for the MLP benchmark runs."""
+    graph = graph if graph is not None else T.complete(n_nodes)
+    ds = mnist_like(n_nodes * per_node + test_size, seed=seed)
+    parts = [np.arange(i * per_node, (i + 1) * per_node) for i in range(n_nodes)]
+    xs, ys = node_datasets(ds, parts)
+    test = (ds.x[-test_size:], ds.y[-test_size:])
+    loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
+    opt = sgd(1e-3, 0.5) if optimizer == "sgd" else adamw(1e-3)
+    eval_fn = make_eval_fn(loss_fn)
+    init_one = lambda gain: lambda k: init_mlp(InitConfig("he_normal", gain), k, hidden=hidden)
+    return graph, xs, ys, test, loss_fn, opt, eval_fn, init_one
 
 
 def run_dfl_mlp(
@@ -46,42 +68,92 @@ def run_dfl_mlp(
     track_sigmas: bool = False,
     aggregate: bool = True,
     test_size: int = 512,
+    executor: bool = True,
 ):
     """One DFL run of the paper's MLP config on MNIST-like data.
 
+    Runs through the fused round executor by default; ``executor=False``
+    takes the legacy per-round ``train_loop`` (the BENCH_rounds baseline).
     Returns (history, seconds_per_round).
     """
-    graph = graph if graph is not None else T.complete(n_nodes)
+    graph, xs, ys, test, loss_fn, opt, eval_fn, init_one = _mlp_setup(
+        n_nodes, graph, per_node, hidden, optimizer, seed, test_size
+    )
     gain = gain if gain is not None else gain_from_graph(graph)
-    ds = mnist_like(n_nodes * per_node + test_size, seed=seed)
-    parts = [np.arange(i * per_node, (i + 1) * per_node) for i in range(n_nodes)]
-    xs, ys = node_datasets(ds, parts)
-    test = (ds.x[-test_size:], ds.y[-test_size:])
-
-    loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
-    opt = sgd(1e-3, 0.5) if optimizer == "sgd" else adamw(1e-3)
-    eval_fn = make_eval_fn(loss_fn)
-    icfg = InitConfig("he_normal", gain)
-    init_one = lambda k: init_mlp(icfg, k, hidden=hidden)
-    state = init_fl_state(jax.random.PRNGKey(seed), n_nodes, init_one, opt)
+    state = init_fl_state(jax.random.PRNGKey(seed), n_nodes, init_one(gain), opt)
     rf = make_round_fn(loss_fn, opt, graph, link_p=link_p, node_p=node_p, aggregate=aggregate)
 
-    def batches():
-        it = node_batch_iterator(xs, ys, batch_size, seed=seed)
-        while True:
-            bs = [next(it) for _ in range(b_local)]
-            yield (
-                np.stack([b.x for b in bs], axis=1),
-                np.stack([b.y for b in bs], axis=1),
-            )
-
     t0 = time.time()
-    state, hist = train_loop(
-        state, rf, batches(), n_rounds=rounds, eval_every=eval_every,
-        eval_fn=eval_fn, eval_batch=test, track_sigmas=track_sigmas,
-    )
+    if executor:
+        sched = batch_index_schedule(per_node, n_nodes, batch_size, rounds * b_local, seed=seed)
+        state, hist = run_trajectory(
+            state, rf, xs, ys, sched, n_rounds=rounds, eval_every=eval_every,
+            eval_fn=eval_fn, eval_batch=test, track_sigmas=track_sigmas,
+            b_local=b_local,
+        )
+    else:
+        def batches():
+            it = node_batch_iterator(xs, ys, batch_size, seed=seed)
+            while True:
+                bs = [next(it) for _ in range(b_local)]
+                yield (
+                    np.stack([b.x for b in bs], axis=1),
+                    np.stack([b.y for b in bs], axis=1),
+                )
+
+        state, hist = train_loop(
+            state, rf, batches(), n_rounds=rounds, eval_every=eval_every,
+            eval_fn=eval_fn, eval_batch=test, track_sigmas=track_sigmas,
+        )
     sec_per_round = (time.time() - t0) / rounds
     return hist, sec_per_round
+
+
+def run_dfl_mlp_sweep(
+    *,
+    n_nodes: int,
+    gains,
+    seeds=(0,),
+    graph=None,
+    rounds: int = 60,
+    per_node: int = 128,
+    batch_size: int = 16,
+    b_local: int = 2,
+    hidden=(128, 64),
+    optimizer="sgd",
+    eval_every: int = 5,
+    data_seed: int = 0,
+    track_sigmas: bool = False,
+    test_size: int = 512,
+):
+    """Vmapped grid of MLP trajectories: one compiled program per call.
+
+    Sweeps the (gain × seed) grid over a shared dataset/topology/batch order
+    (exactly what fig1's per-n {He, corrected} pair needs).  Returns
+    (histories, seconds_per_run) where ``histories[i][j]`` is the history for
+    gains[i] × seeds[j].
+    """
+    graph, xs, ys, test, loss_fn, opt, eval_fn, init_one = _mlp_setup(
+        n_nodes, graph, per_node, hidden, optimizer, data_seed, test_size
+    )
+    states = [
+        init_fl_state(jax.random.PRNGKey(s), n_nodes, init_one(g), opt)
+        for g in gains
+        for s in seeds
+    ]
+    rf = make_round_fn(loss_fn, opt, graph)
+    sched = batch_index_schedule(per_node, n_nodes, batch_size, rounds * b_local, seed=data_seed)
+    t0 = time.time()
+    _, hists = run_sweep(
+        stack_states(states), rf, xs, ys, sched, n_rounds=rounds,
+        eval_every=eval_every, eval_fn=eval_fn, eval_batch=test,
+        track_sigmas=track_sigmas, b_local=b_local,
+    )
+    sec_per_run = (time.time() - t0) / len(states)
+    grid = [
+        [hists[i * len(seeds) + j] for j in range(len(seeds))] for i in range(len(gains))
+    ]
+    return grid, sec_per_run
 
 
 def rounds_to_loss(hist: dict, threshold: float) -> float:

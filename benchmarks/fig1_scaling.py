@@ -8,11 +8,12 @@ graph (cfg A) and fit μ.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from .common import emit, rounds_to_loss, run_dfl_mlp
+from repro.core import topology as T
+from repro.core.initialisation import gain_from_graph
+
+from .common import emit, rounds_to_loss, run_dfl_mlp_sweep
 
 
 def run(quick: bool = True) -> None:
@@ -21,15 +22,18 @@ def run(quick: bool = True) -> None:
     threshold = 2.25  # just below the log(10) = 2.303 plateau
     plateau_rounds = []
     for n in ns:
-        t0 = time.time()
-        hist_plain, spr = run_dfl_mlp(n_nodes=n, gain=1.0, rounds=rounds, eval_every=4)
-        hist_corr, _ = run_dfl_mlp(n_nodes=n, rounds=rounds, eval_every=4)
+        # both inits as one vmapped program over the executor's sweep axis
+        grid, spr = run_dfl_mlp_sweep(
+            n_nodes=n, gains=[1.0, gain_from_graph(T.complete(n))],
+            rounds=rounds, eval_every=4,
+        )
+        hist_plain, hist_corr = grid[0][0], grid[1][0]
         r_plain = rounds_to_loss(hist_plain, threshold)
         r_corr = rounds_to_loss(hist_corr, threshold)
         plateau_rounds.append(r_plain)
         emit(
             f"fig1.n{n}",
-            spr * 1e6,
+            spr / rounds * 1e6,  # µs per round per trajectory, like fig2-fig7
             f"plateau_he={r_plain};plateau_proposed={r_corr};"
             f"final_he={hist_plain['test_loss'][-1]:.3f};final_proposed={hist_corr['test_loss'][-1]:.3f}",
         )

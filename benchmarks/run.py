@@ -2,7 +2,7 @@
 kernel micro-benches and the roofline report.
 
 Usage:
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig1,fig5,...]
+    PYTHONPATH=src python -m benchmarks.run [--full|--quick] [fig1 fig5 ...]
 
 Prints ``name,us_per_call,derived`` CSV rows (also collected in
 benchmarks.common.ROWS).
@@ -24,6 +24,7 @@ from . import (
     fig7_constant_data,
     kernels_bench,
     roofline_report,
+    rounds_bench,
 )
 from .common import emit
 
@@ -37,22 +38,35 @@ MODULES = {
     "fig7": fig7_constant_data,
     "kernels": kernels_bench,
     "roofline": roofline_report,
+    "rounds": rounds_bench,
 }
 
 
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--full", action="store_true", help="paper-scale (slow) settings")
+    p.add_argument("--quick", action="store_true", help="CI-scale settings (the default)")
     p.add_argument("--only", type=str, default=None, help="comma-separated subset")
+    p.add_argument("modules", nargs="*", help="module subset (same names as --only)")
     args = p.parse_args()
+    if args.full and args.quick:
+        p.error("--full and --quick are mutually exclusive")
+    quick = args.quick or not args.full
+    if args.modules and args.only:
+        p.error("give modules positionally or via --only, not both")
 
-    names = list(MODULES) if not args.only else [s.strip() for s in args.only.split(",")]
+    names = args.modules or (
+        list(MODULES) if not args.only else [s.strip() for s in args.only.split(",")]
+    )
+    unknown = [x for x in names if x not in MODULES]
+    if unknown:
+        p.error(f"unknown modules {unknown}; available: {list(MODULES)}")
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
         t0 = time.time()
         try:
-            MODULES[name].run(quick=not args.full)
+            MODULES[name].run(quick=quick)
         except Exception as e:  # noqa: BLE001 — keep the harness sweeping
             failures += 1
             emit(f"{name}.FAILED", 0.0, f"{type(e).__name__}: {e}")

@@ -1,9 +1,12 @@
 """Quickstart: the paper's effect in one minute.
 
 Trains a 16-node decentralised federated MLP on synthetic MNIST-like data
-twice — once with plain He initialisation (the paper's Fig. 1 dashed
-baseline, which plateaus) and once with the proposed ‖v_steady‖⁻¹
-gain-corrected initialisation — and prints both test-loss trajectories.
+with plain He initialisation (the paper's Fig. 1 dashed baseline, which
+plateaus) and with the proposed ‖v_steady‖⁻¹ gain-corrected initialisation,
+and prints both test-loss trajectories.  Both runs execute as ONE fused,
+vmapped program via the round executor (`repro.fed.run_sweep`): the whole
+trajectory pair is a single scan-over-rounds with on-device data sampling
+and on-device eval.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,12 +15,12 @@ import jax
 
 from repro.core import topology as T
 from repro.core.initialisation import InitConfig, gain_from_graph
-from repro.data import mnist_like, node_batch_iterator, node_datasets
-from repro.fed import init_fl_state, make_eval_fn, make_round_fn, train_loop
+from repro.data import batch_index_schedule, mnist_like, node_datasets
+from repro.fed import init_fl_state, make_eval_fn, make_round_fn, run_sweep, stack_states
 from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
 from repro.optim import sgd
 
-N_NODES, PER_NODE, ROUNDS = 16, 128, 40
+N_NODES, PER_NODE, ROUNDS, B_LOCAL = 16, 128, 40, 4
 
 graph = T.complete(N_NODES)  # paper cfg. A: fully-connected communication
 gain = gain_from_graph(graph)
@@ -32,21 +35,22 @@ loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
 opt = sgd(1e-3, momentum=0.5)
 eval_fn = make_eval_fn(loss_fn)
 
-
-def batches():
-    it = node_batch_iterator(xs, ys, 16, seed=0)
-    while True:
-        bs = [next(it) for _ in range(4)]  # 4 local minibatches per round
-        yield (np.stack([b.x for b in bs], 1), np.stack([b.y for b in bs], 1))
-
-
-for label, g in [("He et al. (uncorrected)", 1.0), ("proposed (gain-corrected)", gain)]:
-    init_one = lambda k: init_mlp(InitConfig("he_normal", g), k)
-    state = init_fl_state(jax.random.PRNGKey(0), N_NODES, init_one, opt)
-    round_fn = make_round_fn(loss_fn, opt, graph)
-    state, hist = train_loop(
-        state, round_fn, batches(), n_rounds=ROUNDS, eval_every=5, eval_fn=eval_fn, eval_batch=test
+variants = [("He et al. (uncorrected)", 1.0), ("proposed (gain-corrected)", gain)]
+states = stack_states([
+    init_fl_state(
+        jax.random.PRNGKey(0), N_NODES,
+        lambda k, g=g: init_mlp(InitConfig("he_normal", g), k), opt,
     )
+    for _, g in variants
+])
+schedule = batch_index_schedule(PER_NODE, N_NODES, 16, ROUNDS * B_LOCAL, seed=0)
+_, hists = run_sweep(
+    states, make_round_fn(loss_fn, opt, graph), xs, ys, schedule,
+    n_rounds=ROUNDS, eval_every=5, eval_fn=eval_fn, eval_batch=test,
+    b_local=B_LOCAL,
+)
+
+for (label, _), hist in zip(variants, hists):
     traj = "  ".join(f"{v:.3f}" for v in hist["test_loss"])
     print(f"{label:28s} test loss @ rounds {hist['round']}:\n    {traj}\n")
 

@@ -1,6 +1,6 @@
 """Synthetic datasets, FL partitioning and batching."""
 from .partition import node_datasets, partition_iid, partition_zipf
-from .pipeline import NodeBatches, node_batch_iterator, token_batch_iterator
+from .pipeline import NodeBatches, batch_index_schedule, node_batch_iterator, token_batch_iterator
 from .synthetic import (
     ImageDataset,
     cifar10_like,

@@ -2,9 +2,22 @@
 
 All nodes step in lock-step (one communication round = ``b`` local
 minibatches, Appendix A: minibatch 16, b = 8), so the natural batch layout is
-node-major: ``(n_nodes, batch, ...)``.  The iterator is a deterministic,
-seeded, infinitely-repeating shuffle per node — a faithful stand-in for each
-device's local data loader.
+node-major: ``(n_nodes, batch, ...)``.
+
+Two renderings of the SAME deterministic sample order (DESIGN.md §11):
+
+* ``batch_index_schedule`` — the whole gather schedule as one int32 array,
+  precomputed on host and shipped to the device once; the fused round
+  executor (``repro.fed.executor``) takes each round's minibatches by
+  on-device gather from it.
+* ``node_batch_iterator`` — the host fallback: an infinite iterator that
+  draws the identical per-epoch permutations and yields batches via a single
+  batched gather (no per-node Python loop).  For a given seed the iterator's
+  k-th batch selects exactly ``batch_index_schedule(...)[k]``.
+
+Epoch semantics (shared): every epoch draws one fresh permutation per node;
+the ``per_node mod batch_size`` remainder is dropped; all nodes cross epoch
+boundaries together (cursors advance in lock-step).
 """
 from __future__ import annotations
 
@@ -13,7 +26,12 @@ from typing import Iterator
 
 import numpy as np
 
-__all__ = ["NodeBatches", "node_batch_iterator", "token_batch_iterator"]
+__all__ = [
+    "NodeBatches",
+    "batch_index_schedule",
+    "node_batch_iterator",
+    "token_batch_iterator",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,43 +40,75 @@ class NodeBatches:
     y: np.ndarray  # (n_nodes, batch)
 
 
+def _epoch_orders(rng: np.random.Generator, n_nodes: int, per_node: int) -> np.ndarray:
+    """One epoch's per-node permutations, drawn in a single vectorised call.
+
+    Both the schedule and the iterator consume the generator through this
+    helper, which is what keeps their sample orders identical.
+    """
+    base = np.tile(np.arange(per_node, dtype=np.int64), (n_nodes, 1))
+    return rng.permuted(base, axis=1)
+
+
+def batch_index_schedule(
+    per_node: int, n_nodes: int, batch_size: int, n_batches: int, seed: int = 0
+) -> np.ndarray:
+    """Precompute the full gather schedule: (n_batches, n_nodes, batch_size).
+
+    ``schedule[k, i]`` are the sample indices node i trains on in its k-th
+    minibatch.  Deterministic in ``seed`` and bit-identical to the order
+    ``node_batch_iterator`` yields.
+    """
+    if batch_size > per_node:
+        raise ValueError(f"batch_size {batch_size} > per_node {per_node}")
+    rng = np.random.default_rng(seed)
+    bpe = per_node // batch_size  # batches per epoch (remainder dropped)
+    n_epochs = -(-n_batches // bpe)
+    chunks = []
+    for _ in range(n_epochs):
+        orders = _epoch_orders(rng, n_nodes, per_node)
+        ep = orders[:, : bpe * batch_size].reshape(n_nodes, bpe, batch_size)
+        chunks.append(ep.transpose(1, 0, 2))  # (bpe, n_nodes, batch)
+    return np.concatenate(chunks)[:n_batches].astype(np.int32)
+
+
 def node_batch_iterator(
     xs: np.ndarray, ys: np.ndarray, batch_size: int, seed: int = 0
 ) -> Iterator[NodeBatches]:
-    """Infinite iterator of per-node minibatches with per-node shuffling."""
+    """Infinite iterator of per-node minibatches with per-node shuffling.
+
+    Host fallback of ``batch_index_schedule``: same seed ⇒ same batches, in
+    the same order.  Each yield is one batched gather over the node axis.
+    """
     n_nodes, per_node = ys.shape[:2]
+    if batch_size > per_node:
+        raise ValueError(f"batch_size {batch_size} > per_node {per_node}")
     rng = np.random.default_rng(seed)
-    orders = np.stack([rng.permutation(per_node) for _ in range(n_nodes)])
-    cursors = np.zeros(n_nodes, dtype=np.int64)
+    bpe = per_node // batch_size
+    node_idx = np.arange(n_nodes)[:, None]
     while True:
-        bx = np.empty((n_nodes, batch_size) + xs.shape[2:], dtype=xs.dtype)
-        by = np.empty((n_nodes, batch_size), dtype=ys.dtype)
-        for i in range(n_nodes):
-            take = orders[i][cursors[i] : cursors[i] + batch_size]
-            if len(take) < batch_size:  # epoch boundary: reshuffle
-                orders[i] = rng.permutation(per_node)
-                cursors[i] = 0
-                take = orders[i][:batch_size]
-            bx[i] = xs[i, take]
-            by[i] = ys[i, take]
-            cursors[i] += batch_size
-        yield NodeBatches(x=bx, y=by)
+        orders = _epoch_orders(rng, n_nodes, per_node)
+        for b in range(bpe):
+            take = orders[:, b * batch_size : (b + 1) * batch_size]
+            yield NodeBatches(x=xs[node_idx, take], y=ys[node_idx, take])
 
 
 def token_batch_iterator(
     tokens_per_node: np.ndarray, batch_size: int, seq_len: int, seed: int = 0
 ) -> Iterator[NodeBatches]:
-    """LM batches: x = tokens[t:t+L], y = tokens[t+1:t+L+1], per node."""
+    """LM batches: x = tokens[t:t+L], y = tokens[t+1:t+L+1], per node.
+
+    The window gather is fully vectorised: start offsets broadcast against
+    ``arange(seq_len)`` and one fancy-index pulls every (node, batch) window.
+    """
     n_nodes, stream_len = tokens_per_node.shape
     rng = np.random.default_rng(seed)
     max_start = stream_len - seq_len - 1
+    node_idx = np.arange(n_nodes)[:, None, None]
+    offsets = np.arange(seq_len)
     while True:
         starts = rng.integers(0, max_start, size=(n_nodes, batch_size))
-        x = np.empty((n_nodes, batch_size, seq_len), dtype=np.int32)
-        y = np.empty((n_nodes, batch_size, seq_len), dtype=np.int32)
-        for i in range(n_nodes):
-            for b in range(batch_size):
-                s = starts[i, b]
-                x[i, b] = tokens_per_node[i, s : s + seq_len]
-                y[i, b] = tokens_per_node[i, s + 1 : s + seq_len + 1]
+        win = starts[:, :, None] + offsets  # (n_nodes, batch, seq_len)
+        x = tokens_per_node[node_idx, win].astype(np.int32)
+        y = tokens_per_node[node_idx, win + 1].astype(np.int32)
         yield NodeBatches(x=x, y=y)

@@ -1,0 +1,303 @@
+"""Fused multi-round executor: a whole DFL trajectory as one scanned program.
+
+``fed.trainer.train_loop`` dispatches one jitted round per Python iteration,
+re-assembles every node's minibatch on the host, and blocks on device→host
+syncs at every eval — at the paper's scales dispatch and host overhead
+dominate everything the benchmarks measure.  This module fuses the entire
+trajectory (DESIGN.md §11):
+
+* **scan over rounds** — ``n_rounds`` of local-steps → CommPlan mixing →
+  opt reinit run as chunked ``lax.scan`` inside a single jitted,
+  buffer-donated call; Python re-enters once per *chunk*, not per round.
+* **on-device data sampling** — the per-node datasets live on device and
+  each round's minibatches are taken by gather from the precomputed
+  ``data.pipeline.batch_index_schedule`` (bit-identical order to the host
+  iterator for the same seed).
+* **on-device metrics** — periodic eval / σ_an/σ_ap are computed inside the
+  scan under ``lax.cond`` and written to fixed-size per-round output
+  buffers; the host touches them once, after the last chunk.
+* **sweep axis** — ``run_sweep`` vmaps the whole scanned trajectory over a
+  leading run axis (seeds × gains × ...), so a figure's grid of trajectories
+  compiles to a handful of programs.
+
+``round_fn`` is exactly the function ``make_round_fn`` builds — the executor
+re-uses it unchanged, which is what makes executor-vs-legacy parity
+bit-exact (same PRNG stream, same batch order, same round body).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .trainer import DFLState, sigma_metrics
+
+PyTree = Any
+
+__all__ = ["TrajectoryConfig", "run_trajectory", "run_sweep", "stack_states", "unstack_states"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrajectoryConfig:
+    """Static knobs of a fused trajectory.
+
+    ``eval_every`` matches ``train_loop``: metrics are recorded at rounds
+    ``r % eval_every == 0`` plus the final round; 0 disables recording.
+    ``chunk_size`` bounds rounds per jitted call (0 = auto): smaller chunks
+    surface metrics earlier, larger ones amortise dispatch further.
+    """
+
+    n_rounds: int
+    eval_every: int = 0
+    track_sigmas: bool = False
+    chunk_size: int = 0
+
+    def eval_mask(self) -> np.ndarray:
+        mask = np.zeros(self.n_rounds, dtype=bool)
+        if self.eval_every:
+            mask[:: self.eval_every] = True
+            mask[-1] = True
+        return mask
+
+    def chunks(self) -> list[tuple[int, int]]:
+        size = self.chunk_size
+        if size <= 0:
+            size = self.n_rounds if self.n_rounds <= 1024 else 256
+        return [(r0, min(r0 + size, self.n_rounds)) for r0 in range(0, self.n_rounds, size)]
+
+
+def stack_states(states: Sequence[DFLState]) -> DFLState:
+    """Stack independent DFLStates into one with a leading sweep axis."""
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *states)
+
+
+def unstack_states(states: DFLState) -> list[DFLState]:
+    """Split a swept DFLState back into its independent runs."""
+    n = int(jax.tree_util.tree_leaves(states)[0].shape[0])
+    return [jax.tree_util.tree_map(lambda l: l[i], states) for i in range(n)]
+
+
+def _as_round_schedule(
+    schedule: np.ndarray, n_rounds: int, b_local: int | None = None
+) -> np.ndarray:
+    """(n_rounds·b, n, bs) or (n_rounds, n, b, bs) → (n_rounds, n, b, bs).
+
+    Pass ``b_local`` to pin the local-steps-per-round split: an oversized
+    flat schedule that happens to divide n_rounds would otherwise be
+    silently reinterpreted as more local steps per round.
+    """
+    s = np.asarray(schedule)
+    if s.ndim == 4:
+        if s.shape[0] != n_rounds:
+            raise ValueError(f"schedule rounds {s.shape[0]} != n_rounds {n_rounds}")
+        if b_local is not None and s.shape[2] != b_local:
+            raise ValueError(f"schedule b_local {s.shape[2]} != b_local {b_local}")
+        return s
+    if s.ndim != 3 or s.shape[0] % n_rounds:
+        raise ValueError(
+            f"schedule shape {s.shape} incompatible with n_rounds={n_rounds}"
+        )
+    b = s.shape[0] // n_rounds
+    if b_local is not None and b != b_local:
+        raise ValueError(
+            f"schedule holds {s.shape[0]} batches = {b}/round over {n_rounds} "
+            f"rounds, but b_local={b_local} was requested"
+        )
+    return s.reshape(n_rounds, b, s.shape[1], s.shape[2]).transpose(0, 2, 1, 3)
+
+
+def _build_chunk_fn(
+    round_fn,
+    xs: jax.Array,
+    ys: jax.Array,
+    eval_fn,
+    eval_batch,
+    track_sigmas: bool,
+    *,
+    sweep: bool = False,
+    schedule_mapped: bool = False,
+):
+    """Compile-once chunk executor: (state, sched_chunk, mask_chunk) →
+    (state, per-round metric buffers)."""
+    n_nodes = xs.shape[0]
+    node_idx = jnp.arange(n_nodes)[:, None]
+    n_extra = (1 if eval_fn is not None else 0) + (2 if track_sigmas else 0)
+
+    def gather_batch(idx: jax.Array):
+        # idx (n, b, bs) → ((n, b, bs, *feat), (n, b, bs))
+        flat = idx.reshape(n_nodes, -1)
+        bx = xs[node_idx, flat].reshape(idx.shape + xs.shape[2:])
+        by = ys[node_idx, flat].reshape(idx.shape)
+        return bx, by
+
+    def eval_metrics(params):
+        vals = []
+        if eval_fn is not None:
+            # Barriers keep the eval subgraph isolated from the round body so
+            # it compiles like train_loop's standalone eval_fn.  XLA still
+            # doesn't guarantee bit-identical lowering across programs: the
+            # recorded test loss can differ from the legacy path by ~1 ulp
+            # (the trajectory itself — params/PRNG/train metrics — is exact).
+            # optimization_barrier has no vmap batching rule, so the swept
+            # path goes without.
+            barrier = (lambda x: x) if sweep else jax.lax.optimization_barrier
+            per_node = barrier(eval_fn(barrier(params), eval_batch))
+            vals.append(jnp.mean(per_node).astype(jnp.float32))
+        if track_sigmas:
+            s = sigma_metrics(params)
+            vals += [s["sigma_ap"].astype(jnp.float32), s["sigma_an"].astype(jnp.float32)]
+        return tuple(vals)
+
+    def skip_metrics(params):
+        del params
+        return tuple(jnp.float32(jnp.nan) for _ in range(n_extra))
+
+    def body(state, per_round):
+        idx, do_eval = per_round
+        state, metrics = round_fn(state, gather_batch(idx))
+        if n_extra:
+            extra = jax.lax.cond(do_eval, eval_metrics, skip_metrics, state.params)
+        else:
+            extra = ()
+        return state, (metrics["train_loss"].astype(jnp.float32), *extra)
+
+    def chunk(state, sched_chunk, mask_chunk):
+        return jax.lax.scan(body, state, (sched_chunk, mask_chunk))
+
+    if sweep:
+        chunk = jax.vmap(chunk, in_axes=(0, 0 if schedule_mapped else None, None))
+    # Donating the carried state lets XLA reuse the ensemble's buffers across
+    # chunk calls (a no-op warning-free pass-through on CPU).  _drive_chunks
+    # copies the caller's state before the first call so donation never
+    # invalidates it (train_loop drop-in contract).
+    donate = jax.default_backend() != "cpu"
+    return jax.jit(chunk, donate_argnums=(0,) if donate else ()), donate
+
+
+def _empty_history() -> dict[str, list]:
+    return {"round": [], "train_loss": [], "test_loss": [], "sigma_ap": [], "sigma_an": []}
+
+
+def _assemble_history(
+    mask: np.ndarray, cols: Sequence[np.ndarray], has_eval: bool, track_sigmas: bool
+) -> dict[str, list]:
+    """Per-round device buffers → train_loop-compatible history dict."""
+    rounds = np.nonzero(mask)[0]
+    hist = _empty_history()
+    hist["round"] = [int(r) for r in rounds]
+    hist["train_loss"] = [float(v) for v in cols[0][rounds]]
+    i = 1
+    if has_eval:
+        hist["test_loss"] = [float(v) for v in cols[i][rounds]]
+        i += 1
+    if track_sigmas:
+        hist["sigma_ap"] = [float(v) for v in cols[i][rounds]]
+        hist["sigma_an"] = [float(v) for v in cols[i + 1][rounds]]
+    return hist
+
+
+def _drive_chunks(chunk_fn, state, sched_d, mask_np, cfg, *, round_axis: int = 0, donate: bool = False):
+    """Run the chunk schedule; one host sync, after the last chunk."""
+    if donate:
+        # first chunk call would otherwise donate (delete) the caller's state
+        state = jax.tree_util.tree_map(jnp.copy, state)
+    mask_d = jnp.asarray(mask_np)
+    outs = []
+    for r0, r1 in cfg.chunks():
+        sched_c = jax.lax.slice_in_dim(sched_d, r0, r1, axis=round_axis)
+        state, out = chunk_fn(state, sched_c, mask_d[r0:r1])
+        outs.append(out)
+    n_cols = len(outs[0])
+    cols = [
+        np.concatenate([np.asarray(o[i]) for o in outs], axis=-1) for i in range(n_cols)
+    ]
+    return state, cols
+
+
+def run_trajectory(
+    state: DFLState,
+    round_fn: Callable[[DFLState, Any], tuple[DFLState, dict]],
+    xs: np.ndarray,
+    ys: np.ndarray,
+    schedule: np.ndarray,
+    *,
+    n_rounds: int,
+    eval_every: int = 0,
+    eval_fn=None,
+    eval_batch=None,
+    track_sigmas: bool = False,
+    chunk_size: int = 0,
+    b_local: int | None = None,
+) -> tuple[DFLState, dict[str, list]]:
+    """Run a full trajectory fused on device.  Drop-in for ``train_loop``:
+    same ``round_fn``, same history dict, bit-identical results — minus the
+    per-round dispatch, host batch assembly and per-eval blocking syncs.
+
+    ``schedule`` is ``batch_index_schedule(...)`` output covering
+    ``n_rounds × b_local`` minibatches (or already round-shaped
+    ``(n_rounds, n, b, bs)``); give ``b_local`` to validate the split.
+    """
+    cfg = TrajectoryConfig(n_rounds, eval_every, track_sigmas, chunk_size)
+    sched_d = jnp.asarray(_as_round_schedule(schedule, n_rounds, b_local))
+    xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
+    eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
+    chunk_fn, donate = _build_chunk_fn(round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas)
+    state, cols = _drive_chunks(chunk_fn, state, sched_d, cfg.eval_mask(), cfg, donate=donate)
+    hist = _assemble_history(cfg.eval_mask(), cols, eval_fn is not None, track_sigmas)
+    return state, hist
+
+
+def run_sweep(
+    states: DFLState | Sequence[DFLState],
+    round_fn: Callable[[DFLState, Any], tuple[DFLState, dict]],
+    xs: np.ndarray,
+    ys: np.ndarray,
+    schedule: np.ndarray,
+    *,
+    n_rounds: int,
+    eval_every: int = 0,
+    eval_fn=None,
+    eval_batch=None,
+    track_sigmas: bool = False,
+    chunk_size: int = 0,
+    schedule_per_run: bool = False,
+    b_local: int | None = None,
+) -> tuple[DFLState, list[dict[str, list]]]:
+    """Vmapped sweep: many trajectories (seeds, gains, ...) in one program.
+
+    ``states`` is a list of per-run DFLStates (or an already-stacked one with
+    a leading sweep axis).  Dataset and topology are shared across the sweep;
+    pass ``schedule_per_run=True`` with a leading run axis on ``schedule`` to
+    give each run its own batch order.  Returns the stacked final state and
+    one history dict per run.
+    """
+    if isinstance(states, (list, tuple)):
+        states = stack_states(states)
+    n_runs = int(jax.tree_util.tree_leaves(states)[0].shape[0])
+    cfg = TrajectoryConfig(n_rounds, eval_every, track_sigmas, chunk_size)
+    if schedule_per_run:
+        sched = np.stack(
+            [_as_round_schedule(s, n_rounds, b_local) for s in np.asarray(schedule)]
+        )
+    else:
+        sched = _as_round_schedule(schedule, n_rounds, b_local)
+    sched_d = jnp.asarray(sched)
+    xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
+    eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
+    chunk_fn, donate = _build_chunk_fn(
+        round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas,
+        sweep=True, schedule_mapped=schedule_per_run,
+    )
+    state, cols = _drive_chunks(
+        chunk_fn, states, sched_d, cfg.eval_mask(), cfg,
+        round_axis=1 if schedule_per_run else 0, donate=donate,
+    )
+    mask = cfg.eval_mask()
+    hists = [
+        _assemble_history(mask, [c[i] for c in cols], eval_fn is not None, track_sigmas)
+        for i in range(n_runs)
+    ]
+    return state, hists

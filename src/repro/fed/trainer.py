@@ -149,12 +149,21 @@ def sigma_metrics(params: PyTree) -> dict[str, jax.Array]:
 
     σ_ap: mean over nodes of the std across that node's parameters;
     σ_an: mean over parameters of the std across nodes.
+
+    Streaming per-leaf moment accumulation: equivalent to std over the
+    concatenated (n, d_total) matrix but never materialises it, so the
+    fused executor can run this every eval round on device for free.
     """
     leaves = [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in jax.tree_util.tree_leaves(params)]
-    w = jnp.concatenate(leaves, axis=1)  # (n, d_total)
+    d_total = sum(l.shape[1] for l in leaves)
+    # σ_ap: two-pass per-node moments accumulated across leaves
+    mean_n = sum(l.sum(axis=1) for l in leaves) / d_total  # (n,)
+    var_n = sum(((l - mean_n[:, None]) ** 2).sum(axis=1) for l in leaves) / d_total
+    # σ_an: per-parameter std across nodes, reduced leaf by leaf
+    an_sum = sum(jnp.std(l, axis=0).sum() for l in leaves)
     return {
-        "sigma_ap": jnp.std(w, axis=1).mean(),
-        "sigma_an": jnp.std(w, axis=0).mean(),
+        "sigma_ap": jnp.sqrt(var_n).mean(),
+        "sigma_an": an_sum / d_total,
     }
 
 
@@ -169,24 +178,35 @@ def train_loop(
     track_sigmas: bool = False,
     progress: bool = False,
 ) -> tuple[DFLState, dict[str, list]]:
-    """Python-level driver (checkpoint hooks etc. live in launch/train.py)."""
+    """Python-level driver (checkpoint hooks etc. live in launch/train.py).
+
+    Legacy per-round-dispatch path; ``repro.fed.executor.run_trajectory`` is
+    the fused equivalent (same round_fn, bit-identical results).  Metrics are
+    collected as device scalars and converted to floats once at the end, so
+    eval rounds no longer block the dispatch pipeline (unless ``progress``
+    forces a readback to print).
+    """
     jit_round = jax.jit(round_fn)
+    jit_sigmas = jax.jit(sigma_metrics)
     history: dict[str, list] = {"round": [], "train_loss": [], "test_loss": [], "sigma_ap": [], "sigma_an": []}
     for r in range(n_rounds):
         state, metrics = jit_round(state, next(batches))
         if eval_every and (r % eval_every == 0 or r == n_rounds - 1):
             history["round"].append(r)
-            history["train_loss"].append(float(metrics["train_loss"]))
+            history["train_loss"].append(metrics["train_loss"])
             if eval_fn is not None:
                 tl = eval_fn(state.params, eval_batch)
-                history["test_loss"].append(float(jnp.mean(tl)))
+                history["test_loss"].append(jnp.mean(tl))
             if track_sigmas:
-                s = sigma_metrics(state.params)
-                history["sigma_ap"].append(float(s["sigma_ap"]))
-                history["sigma_an"].append(float(s["sigma_an"]))
+                s = jit_sigmas(state.params)
+                history["sigma_ap"].append(s["sigma_ap"])
+                history["sigma_an"].append(s["sigma_an"])
             if progress:
-                msg = f"round {r:4d} train {history['train_loss'][-1]:.4f}"
+                msg = f"round {r:4d} train {float(history['train_loss'][-1]):.4f}"
                 if history["test_loss"]:
-                    msg += f" test {history['test_loss'][-1]:.4f}"
+                    msg += f" test {float(history['test_loss'][-1]):.4f}"
                 print(msg, flush=True)
-    return state, history
+    return state, {
+        k: [float(v) if isinstance(v, jax.Array) else v for v in vs]
+        for k, vs in history.items()
+    }

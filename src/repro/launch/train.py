@@ -24,6 +24,7 @@ from repro.configs import get_reduced_config
 from repro.core import topology as T
 from repro.core.initialisation import InitConfig, gain_from_graph
 from repro.data import (
+    batch_index_schedule,
     cifar10_like,
     make_token_stream,
     mnist_like,
@@ -34,7 +35,7 @@ from repro.data import (
     so2sat_like,
     token_batch_iterator,
 )
-from repro.fed import init_fl_state, make_eval_fn, make_round_fn, train_loop
+from repro.fed import init_fl_state, make_eval_fn, make_round_fn, run_trajectory, train_loop
 from repro.models import transformer as TF
 from repro.models.paper_models import classifier_loss, cnn_forward, init_cnn, init_mlp, init_vgg16, mlp_forward, vgg16_forward
 from repro.optim import adamw, sgd
@@ -69,6 +70,11 @@ def main() -> None:
     p.add_argument("--link-p", type=float, default=1.0)
     p.add_argument("--node-p", type=float, default=1.0)
     p.add_argument("--no-gain-correction", action="store_true")
+    p.add_argument(
+        "--legacy-loop", action="store_true",
+        help="per-round dispatch via train_loop instead of the fused executor",
+    )
+    p.add_argument("--chunk-rounds", type=int, default=0, help="executor scan chunk size (0 = auto)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--ckpt-dir", type=str, default=None)
     p.add_argument("--history-out", type=str, default=None)
@@ -131,10 +137,25 @@ def main() -> None:
 
     state = init_fl_state(jax.random.PRNGKey(args.seed), n, init_one, opt)
     round_fn = make_round_fn(loss_fn, opt, graph, link_p=args.link_p, node_p=args.node_p)
-    state, hist = train_loop(
-        state, round_fn, batches(), n_rounds=args.rounds, eval_every=max(1, args.rounds // 20),
-        eval_fn=eval_fn, eval_batch=eval_batch, track_sigmas=True, progress=True,
-    )
+    eval_every = max(1, args.rounds // 20)
+    if args.arch or args.legacy_loop:
+        # token streams sample per-batch windows (no gather schedule yet), so
+        # the arch path stays on the host-driven loop
+        state, hist = train_loop(
+            state, round_fn, batches(), n_rounds=args.rounds, eval_every=eval_every,
+            eval_fn=eval_fn, eval_batch=eval_batch, track_sigmas=True, progress=True,
+        )
+    else:
+        sched = batch_index_schedule(
+            ys.shape[1], n, args.batch_size, args.rounds * args.local_batches, seed=args.seed
+        )
+        state, hist = run_trajectory(
+            state, round_fn, xs, ys, sched, n_rounds=args.rounds, eval_every=eval_every,
+            eval_fn=eval_fn, eval_batch=eval_batch, track_sigmas=True,
+            chunk_size=args.chunk_rounds, b_local=args.local_batches,
+        )
+        for i, r in enumerate(hist["round"]):
+            print(f"round {r:4d} train {hist['train_loss'][i]:.4f} test {hist['test_loss'][i]:.4f}", flush=True)
     if args.ckpt_dir:
         path = save_train_state(args.ckpt_dir, int(state.round), state.params, meta={"graph": graph.name})
         print(f"checkpoint: {path}")

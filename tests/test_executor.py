@@ -1,0 +1,191 @@
+"""Fused round executor: parity with the legacy per-round train_loop.
+
+The executor re-uses the exact ``round_fn`` that ``make_round_fn`` builds and
+gathers its minibatches from ``batch_index_schedule`` — the same PRNG stream
+and the same batch order as ``train_loop`` + ``node_batch_iterator``.  The
+trajectory (params, opt state, rng, train/σ metrics) must therefore be
+bit-identical.  The recorded test loss is a read-only observable computed in
+a different XLA program; it is allowed the ~1-ulp slack XLA reserves when
+lowering the same subgraph in different programs.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import topology as T
+from repro.core.commplan import compile_plan
+from repro.core.initialisation import InitConfig
+from repro.data import batch_index_schedule, mnist_like, node_batch_iterator, node_datasets
+from repro.fed import (
+    init_fl_state,
+    make_eval_fn,
+    make_round_fn,
+    run_sweep,
+    run_trajectory,
+    stack_states,
+    train_loop,
+    unstack_states,
+)
+from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
+from repro.optim import sgd
+
+N, PER_NODE, BS, B_LOCAL, ROUNDS = 6, 48, 8, 2, 10
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = mnist_like(N * PER_NODE + 64, seed=0)
+    parts = [np.arange(i * PER_NODE, (i + 1) * PER_NODE) for i in range(N)]
+    xs, ys = node_datasets(ds, parts)
+    test = (ds.x[-64:], ds.y[-64:])
+    loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
+    opt = sgd(1e-3, 0.5)
+    init_one = lambda k: init_mlp(InitConfig("he_normal", 2.0), k, hidden=(32,))
+    return xs, ys, test, loss_fn, opt, init_one
+
+
+def _batches(xs, ys, seed=0):
+    it = node_batch_iterator(xs, ys, BS, seed=seed)
+    while True:
+        b = [next(it) for _ in range(B_LOCAL)]
+        yield (np.stack([q.x for q in b], 1), np.stack([q.y for q in b], 1))
+
+
+def _schedule(seed=0, rounds=ROUNDS):
+    return batch_index_schedule(PER_NODE, N, BS, rounds * B_LOCAL, seed=seed)
+
+
+def _assert_states_bit_equal(s1, s2):
+    for a, b in zip(jax.tree_util.tree_leaves(s1), jax.tree_util.tree_leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _run_both(setup, plan, link_p=1.0, chunk_size=0, **round_kw):
+    xs, ys, test, loss_fn, opt, init_one = setup
+    eval_fn = make_eval_fn(loss_fn)
+    rf = make_round_fn(loss_fn, opt, plan, link_p=link_p, **round_kw)
+    common = dict(eval_every=3, eval_fn=eval_fn, eval_batch=test, track_sigmas=True)
+    s_leg = init_fl_state(jax.random.PRNGKey(0), N, init_one, opt)
+    s_leg, h_leg = train_loop(s_leg, rf, _batches(xs, ys), n_rounds=ROUNDS, **common)
+    s_ex = init_fl_state(jax.random.PRNGKey(0), N, init_one, opt)
+    s_ex, h_ex = run_trajectory(
+        s_ex, rf, xs, ys, _schedule(), n_rounds=ROUNDS, chunk_size=chunk_size, **common
+    )
+    return (s_leg, h_leg), (s_ex, h_ex)
+
+
+def _assert_parity(leg, ex):
+    (s_leg, h_leg), (s_ex, h_ex) = leg, ex
+    _assert_states_bit_equal(s_leg, s_ex)
+    assert h_leg["round"] == h_ex["round"]
+    # the trajectory's own metrics are computed by the same round_fn: exact
+    assert h_leg["train_loss"] == h_ex["train_loss"]
+    assert h_leg["sigma_ap"] == h_ex["sigma_ap"]
+    assert h_leg["sigma_an"] == h_ex["sigma_an"]
+    # test loss: separate XLA program → 1-ulp slack
+    np.testing.assert_allclose(h_leg["test_loss"], h_ex["test_loss"], rtol=2e-6)
+
+
+def test_parity_dense_backend(setup):
+    plan = compile_plan(T.complete(N), backend="dense")
+    _assert_parity(*_run_both(setup, plan))
+
+
+def test_parity_sparse_backend(setup):
+    plan = compile_plan(T.random_k_regular(N, 3, seed=0), backend="sparse")
+    _assert_parity(*_run_both(setup, plan))
+
+
+def test_parity_dense_with_failures(setup):
+    """Failure draws come from the state's PRNG stream — the scanned stream
+    must match the per-round one draw for draw."""
+    plan = compile_plan(T.complete(N), backend="dense")
+    _assert_parity(*_run_both(setup, plan, link_p=0.5))
+
+
+def test_parity_sparse_with_failures(setup):
+    plan = compile_plan(T.random_k_regular(N, 3, seed=0), backend="sparse")
+    _assert_parity(*_run_both(setup, plan, link_p=0.6))
+
+
+def test_parity_chunked(setup):
+    """Chunk boundaries (incl. a ragged final chunk) don't change anything."""
+    plan = compile_plan(T.complete(N), backend="dense")
+    _assert_parity(*_run_both(setup, plan, chunk_size=4))
+
+
+def test_host_iterator_matches_schedule(setup):
+    """Satellite contract: the vectorised host iterator and the on-device
+    gather schedule select the same samples in the same order."""
+    xs, ys, *_ = setup
+    sched = batch_index_schedule(PER_NODE, N, BS, 3 * (PER_NODE // BS) + 2, seed=7)
+    it = node_batch_iterator(xs, ys, BS, seed=7)
+    node = np.arange(N)[:, None]
+    for k in range(sched.shape[0]):  # crosses epoch reshuffle boundaries
+        b = next(it)
+        np.testing.assert_array_equal(b.y, ys[node, sched[k]])
+        np.testing.assert_array_equal(b.x, xs[node, sched[k]])
+
+
+def test_schedule_indices_cover_epochs():
+    sched = batch_index_schedule(32, 4, 8, 8, seed=0)  # exactly 2 epochs
+    assert sched.shape == (8, 4, 8)
+    for node in range(4):
+        for epoch in range(2):
+            idx = sched[epoch * 4 : (epoch + 1) * 4, node].ravel()
+            assert sorted(idx.tolist()) == list(range(32))  # full pass, no repeats
+
+
+def test_sweep_matches_stacked_independent_runs(setup):
+    """vmapped sweep axis ≡ the same runs executed independently."""
+    xs, ys, test, loss_fn, opt, _ = setup
+    eval_fn = make_eval_fn(loss_fn)
+    rf = make_round_fn(loss_fn, opt, T.complete(N))
+    # sweep over (gain, seed): different init scales and different init keys
+    variants = [(1.0, 0), (2.5, 1)]
+    states = [
+        init_fl_state(
+            jax.random.PRNGKey(s), N,
+            lambda k, g=g: init_mlp(InitConfig("he_normal", g), k, hidden=(32,)), opt,
+        )
+        for g, s in variants
+    ]
+    common = dict(n_rounds=ROUNDS, eval_every=3, eval_fn=eval_fn, eval_batch=test, track_sigmas=True)
+    swept, hists = run_sweep(stack_states(states), rf, xs, ys, _schedule(), **common)
+    finals = unstack_states(swept)
+    assert len(hists) == len(variants)
+    for state, hist in zip(states, hists):
+        s_ind, h_ind = run_trajectory(state, rf, xs, ys, _schedule(), **common)
+        for a, b in zip(jax.tree_util.tree_leaves(s_ind), jax.tree_util.tree_leaves(finals.pop(0))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-7)
+        assert hist["round"] == h_ind["round"]
+        np.testing.assert_allclose(hist["train_loss"], h_ind["train_loss"], rtol=1e-5)
+        np.testing.assert_allclose(hist["test_loss"], h_ind["test_loss"], rtol=1e-5)
+        np.testing.assert_allclose(hist["sigma_an"], h_ind["sigma_an"], rtol=1e-4, atol=1e-9)
+
+
+def test_sweep_per_run_schedules(setup):
+    """schedule_per_run routes run i through schedule i — probed with
+    IDENTICAL init states so only the schedule axis can cause divergence."""
+    xs, ys, test, loss_fn, opt, init_one = setup
+    rf = make_round_fn(loss_fn, opt, T.complete(N))
+    state = init_fl_state(jax.random.PRNGKey(0), N, init_one, opt)
+    kw = dict(n_rounds=ROUNDS, eval_every=3, schedule_per_run=True)
+    # control: same schedule for both runs → identical trajectories
+    same = np.stack([_schedule(seed=0)] * 2)
+    _, h_same = run_sweep([state, state], rf, xs, ys, same, **kw)
+    assert h_same[0]["train_loss"] == h_same[1]["train_loss"]
+    # distinct schedules → run 1 must diverge from run 0
+    diff = np.stack([_schedule(seed=0), _schedule(seed=1)])
+    _, h_diff = run_sweep([state, state], rf, xs, ys, diff, **kw)
+    assert h_diff[0]["train_loss"] == h_same[0]["train_loss"]  # run 0 kept schedule 0
+    assert h_diff[1]["train_loss"] != h_diff[0]["train_loss"]
+
+
+def test_no_eval_history_is_empty(setup):
+    xs, ys, test, loss_fn, opt, init_one = setup
+    rf = make_round_fn(loss_fn, opt, T.complete(N))
+    state = init_fl_state(jax.random.PRNGKey(0), N, init_one, opt)
+    _, hist = run_trajectory(state, rf, xs, ys, _schedule(), n_rounds=ROUNDS)
+    assert hist["round"] == [] and hist["train_loss"] == []

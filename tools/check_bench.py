@@ -1,0 +1,67 @@
+"""Validate that the checked-in BENCH_*.json artifacts stay parseable.
+
+CI runs this so a benchmark writer that drifts from the schema (or a bad
+hand-edit) fails the build instead of silently breaking the roofline /
+rendering tooling that consumes these files.
+
+Usage: python tools/check_bench.py [repo_root]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+# per-file required keys: top level and per record
+SCHEMAS = {
+    "BENCH_mixing.json": (["records"], ["family", "n", "d", "us_dense"]),
+    "BENCH_rounds.json": (["records"], ["config", "n_nodes", "rounds", "sec_executor"]),
+}
+DEFAULT_SCHEMA = (["records"], [])
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable ({e})"]
+    if not isinstance(doc, dict):
+        return [f"{path.name}: top level must be an object, got {type(doc).__name__}"]
+    top_keys, rec_keys = SCHEMAS.get(path.name, DEFAULT_SCHEMA)
+    for k in top_keys:
+        if k not in doc:
+            errors.append(f"{path.name}: missing top-level key {k!r}")
+    records = doc.get("records", [])
+    if not isinstance(records, list) or not records:
+        errors.append(f"{path.name}: 'records' must be a non-empty list")
+        return errors
+    for i, rec in enumerate(records):
+        if not isinstance(rec, dict):
+            errors.append(f"{path.name}: records[{i}] is not an object")
+            continue
+        for k in rec_keys:
+            if k not in rec:
+                errors.append(f"{path.name}: records[{i}] missing {k!r}")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else pathlib.Path(__file__).resolve().parent.parent
+    paths = sorted(root.glob("BENCH_*.json"))
+    if not paths:
+        print(f"no BENCH_*.json found under {root}", file=sys.stderr)
+        return 1
+    errors: list[str] = []
+    for p in paths:
+        errs = check_file(p)
+        errors.extend(errs)
+        n_rec = "-" if errs else len(json.loads(p.read_text())["records"])
+        print(f"{p.name}: {'FAIL' if errs else 'ok'} ({n_rec} records)")
+    for e in errors:
+        print(f"  {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
