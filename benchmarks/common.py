@@ -156,6 +156,54 @@ def run_dfl_mlp_sweep(
     return grid, sec_per_run
 
 
+def run_dfl_mlp_uncoordinated(
+    *,
+    n_nodes: int,
+    est_rounds: int,
+    graph=None,
+    rounds: int = 60,
+    per_node: int = 128,
+    batch_size: int = 16,
+    b_local: int = 2,
+    hidden=(128, 64),
+    optimizer="sgd",
+    mode: str = "vnorm",
+    eval_every: int = 5,
+    seed: int = 0,
+    test_size: int = 512,
+):
+    """One truly-uncoordinated DFL run: per-node gains from the on-device
+    gossip engine with a budget of ``est_rounds`` rounds each for the
+    power-iteration and push-sum phases, fused into the training program via
+    ``run_warmup_trajectory`` (estimate → per-node init → train, one jit).
+
+    Returns (history, seconds_per_round, gains) — ``gains`` is the realised
+    (n,) per-node vector, so callers can report estimation noise.
+    """
+    from repro.core.commplan import compile_plan
+    from repro.fed import run_warmup_trajectory
+    from repro.gossip import make_gain_estimator
+
+    graph, xs, ys, test, loss_fn, opt, eval_fn, init_one = _mlp_setup(
+        n_nodes, graph, per_node, hidden, optimizer, seed, test_size
+    )
+    init_one_g = lambda k, gn: init_one(gn)(k)
+    estimate_fn = make_gain_estimator(
+        compile_plan(graph), pi_rounds=est_rounds, ps_rounds=est_rounds, mode=mode
+    )
+    rf = make_round_fn(loss_fn, opt, graph)
+    sched = batch_index_schedule(per_node, n_nodes, batch_size, rounds * b_local, seed=seed)
+    t0 = time.time()
+    state, hist, gains = run_warmup_trajectory(
+        jax.random.PRNGKey(seed), rf, xs, ys, sched, n_nodes=n_nodes,
+        init_one=init_one_g, optimizer=opt, estimate_gains=estimate_fn,
+        n_rounds=rounds, eval_every=eval_every, eval_fn=eval_fn, eval_batch=test,
+        b_local=b_local,
+    )
+    sec_per_round = (time.time() - t0) / rounds
+    return hist, sec_per_round, gains
+
+
 def rounds_to_loss(hist: dict, threshold: float) -> float:
     """First recorded round where mean test loss drops below threshold."""
     for r, l in zip(hist["round"], hist["test_loss"]):

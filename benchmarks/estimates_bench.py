@@ -1,0 +1,106 @@
+"""Gossip estimation engine throughput (BENCH_estimates.json).
+
+Times the two warmup protocols of ``repro.gossip`` — push-sum consensus and
+the power-iteration ‖v_steady‖ estimator — as jitted 64-round scan blocks
+over n × topology family, on the dense and sparse CommPlan backends.  The
+estimation phase precedes *every* uncoordinated training run, so its
+rounds/sec is a first-class number: the headline row is (heavytail, 1024),
+where the sparse backend's O(E) spread must beat the dense O(n²) operator
+for warmup to stay negligible at production ensemble sizes.
+
+Schema: ``{device, cpu_count, quick, rounds_block, records: [{family, n,
+n_edges, us_dense, us_sparse, us_pi_dense, us_pi_sparse,
+sparse_speedup_vs_dense}]}`` — us_* are per *gossip round* (block time /
+rounds).  ``tools/check_bench.py`` validates the checked-in artifact in CI.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core import topology as T
+from repro.core.commplan import compile_plan
+from repro.gossip import power_iteration_norm, push_sum
+
+from .common import emit
+
+_FAMILIES = {
+    "ring": lambda n: T.ring(n),
+    "kreg": lambda n: T.random_k_regular(n, 4, seed=0),
+    "ba": lambda n: T.barabasi_albert(n, 4, seed=0),
+    "heavytail": lambda n: T.configuration_heavy_tail(n, 2.2, seed=0),
+}
+
+BLOCK = 64  # rounds per jitted call: times the scan body, not dispatch
+
+
+def _best_of(f, *args, iters=3):
+    jax.block_until_ready(f(*args))  # compile + warm caches
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = f(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(
+    quick: bool = True,
+    ns=None,
+    out_path: str | pathlib.Path = "BENCH_estimates.json",
+) -> dict:
+    ns = ns if ns is not None else ((16, 64, 256) if quick else (16, 64, 256, 1024))
+    records = []
+    for family, build in _FAMILIES.items():
+        for n in ns:
+            g = build(n)
+            vals = np.asarray(g.degrees, np.float32)
+            row: dict = {
+                "family": family,
+                "n": n,
+                "n_edges": g.n_edges,
+                "rounds_block": BLOCK,
+            }
+            for backend in ("dense", "sparse"):
+                plan = compile_plan(g, backend)
+                sec = _best_of(
+                    jax.jit(lambda v, p=plan: push_sum(p, v, BLOCK)), vals
+                )
+                row[f"us_{backend}"] = sec / BLOCK * 1e6
+                emit(
+                    f"estimates.push_sum.{backend}",
+                    sec / BLOCK * 1e6,
+                    f"family={family};n={n};rounds_per_sec={BLOCK / sec:.0f}",
+                )
+                sec_pi = _best_of(
+                    jax.jit(
+                        lambda p=plan: power_iteration_norm(p, BLOCK // 2, BLOCK // 2)
+                    )
+                )
+                row[f"us_pi_{backend}"] = sec_pi / BLOCK * 1e6
+                emit(
+                    f"estimates.power_iter.{backend}",
+                    sec_pi / BLOCK * 1e6,
+                    f"family={family};n={n};rounds_per_sec={BLOCK / sec_pi:.0f}",
+                )
+            row["sparse_speedup_vs_dense"] = row["us_dense"] / row["us_sparse"]
+            records.append(row)
+    result = {
+        "device": jax.devices()[0].device_kind,
+        "cpu_count": os.cpu_count(),
+        "quick": quick,
+        "rounds_block": BLOCK,
+        "records": records,
+    }
+    pathlib.Path(out_path).write_text(json.dumps(result, indent=1))
+    return result
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -15,6 +15,7 @@ import time
 import traceback
 
 from . import (
+    estimates_bench,
     fig1_scaling,
     fig2_failures,
     fig3_dynamics,
@@ -39,6 +40,7 @@ MODULES = {
     "kernels": kernels_bench,
     "roofline": roofline_report,
     "rounds": rounds_bench,
+    "estimates": estimates_bench,
 }
 
 

@@ -1,0 +1,74 @@
+"""Truly uncoordinated initialisation: estimate → init → train, one program.
+
+The paper's headline claim (§4.4) is that no node needs to *know* the
+network: each derives its own gain ``‖v̂_steady‖⁻¹`` from gossip with its
+neighbours.  This example makes that literal.  On a random 4-regular graph
+with unreliable links (20% of edges drop per round), every node
+
+  1. runs the on-device gossip engine (``repro.gossip``) for a small budget
+     of power-iteration + push-sum rounds — over the same failure-prone
+     links the training rounds will use,
+  2. turns its own noisy estimates into its own init gain,
+  3. draws its parameters with that gain and starts training —
+
+with all three phases fused into a single jitted program by
+``run_warmup_trajectory`` (no host round-trip between estimation and
+training).  Compare against the perfect-knowledge gain and the unscaled He
+baseline: even a tiny estimation budget recovers almost all of the benefit.
+
+Run:  PYTHONPATH=src python examples/uncoordinated_init.py
+"""
+import jax
+import numpy as np
+
+from repro.core import topology as T
+from repro.core.commplan import FailureModel, compile_plan
+from repro.core.initialisation import InitConfig, gain_from_graph
+from repro.core.mixing import spectral_gap
+from repro.data import batch_index_schedule, mnist_like, node_datasets
+from repro.fed import init_fl_state, make_eval_fn, make_round_fn, run_trajectory, run_warmup_trajectory
+from repro.gossip import convergence_report, make_gain_estimator
+from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
+from repro.optim import sgd
+
+N_NODES, PER_NODE, ROUNDS, B_LOCAL, LINK_P = 16, 128, 40, 4, 0.8
+
+graph = T.random_k_regular(N_NODES, 4, seed=0)
+exact_gain = gain_from_graph(graph)
+print(f"network: {graph.name}  spectral gap={spectral_gap(graph):.3f}  "
+      f"exact ‖v_steady‖⁻¹ = {exact_gain:.2f}  link_p={LINK_P}\n")
+
+ds = mnist_like(N_NODES * PER_NODE + 512, seed=0)
+parts = [np.arange(i * PER_NODE, (i + 1) * PER_NODE) for i in range(N_NODES)]
+xs, ys = node_datasets(ds, parts)
+test = (ds.x[-512:], ds.y[-512:])
+loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
+opt = sgd(1e-3, momentum=0.5)
+eval_fn = make_eval_fn(loss_fn)
+icfg = InitConfig("he_normal", 1.0)
+init_one_g = lambda k, gn: init_mlp(icfg.replace(gain=gn), k)
+rf = make_round_fn(loss_fn, opt, graph, link_p=LINK_P)
+sched = batch_index_schedule(PER_NODE, N_NODES, 16, ROUNDS * B_LOCAL, seed=0)
+common = dict(n_rounds=ROUNDS, eval_every=10, eval_fn=eval_fn, eval_batch=test, b_local=B_LOCAL)
+
+# how many gossip rounds does this topology need? ask the diagnostics
+est_plan = compile_plan(graph, failures=FailureModel(link_p=LINK_P))
+report = convergence_report(est_plan, 64, jax.random.PRNGKey(99))
+print(f"gossip convergence: fitted rate {report['fitted_rate']:.3f} "
+      f"(predicted |λ₂| = {report['predicted_rate']:.3f}), "
+      f"1% error at round {report['rounds_to_1pct']}\n")
+
+for label, budget in [("tiny budget (4 rounds)", 4), ("converged budget (32 rounds)", 32)]:
+    estimate_fn = make_gain_estimator(est_plan, pi_rounds=budget, ps_rounds=budget)
+    _, hist, gains = run_warmup_trajectory(
+        jax.random.PRNGKey(0), rf, xs, ys, sched, n_nodes=N_NODES,
+        init_one=init_one_g, optimizer=opt, estimate_gains=estimate_fn, **common,
+    )
+    print(f"{label:28s} per-node gains ∈ [{gains.min():.2f}, {gains.max():.2f}]  "
+          f"final test loss {hist['test_loss'][-1]:.3f}")
+
+for label, gain in [("perfect knowledge", exact_gain), ("He baseline (no correction)", 1.0)]:
+    state = init_fl_state(jax.random.PRNGKey(0), N_NODES, init_one_g, opt,
+                          gains=np.full(N_NODES, gain, np.float32))
+    _, hist = run_trajectory(state, rf, xs, ys, sched, **common)
+    print(f"{label:28s} gain {gain:.2f}  final test loss {hist['test_loss'][-1]:.3f}")

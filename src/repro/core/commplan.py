@@ -135,7 +135,56 @@ class CommPlan:
         color_w, self_w = self.color_round_weights(key)
         return mix_pytree_colored(params, self.partners, color_w, self_w)
 
+    def spread(self, values: jax.Array, key: jax.Array | None = None) -> jax.Array:
+        """One *send-form* (column-stochastic) round: ``values ← Mᵀ values``.
+
+        ``mix`` applies the row-stochastic receive operator ``M`` (Eq. 2);
+        ``spread`` applies its transpose — column-stochastic, hence
+        mass-conserving (``values.sum(0)`` is invariant), which is the
+        property push-sum gossip needs (``repro.gossip``, paper §4.4).  For
+        undirected graphs with unit data sizes ``Mᵀ`` *is* the paper's
+        mixing matrix ``A'`` of Eq. 3: node j keeps ``1/(k_j+1)`` of its
+        mass and pushes ``1/(k_j+1)`` along each live edge.
+
+        Same backends, same sharding rules and — crucially — the same
+        per-edge/per-node failure draws as ``mix`` for the same ``key``:
+        estimation traffic rides exactly the links training rides.
+
+        ``values``: (n,) or (n, k) float payload.  Returns the same shape.
+        """
+        if self.failures.active and key is None:
+            raise ValueError("failure model active: spread() needs a PRNG key")
+        x = jnp.asarray(values, jnp.float32)
+        squeeze = x.ndim == 1
+        if squeeze:
+            x = x[:, None]
+        if self.backend == "dense":
+            m = self._dense_round_matrix(key)
+            out = jnp.einsum("ji,jk->ik", m, x)
+        elif self.backend == "sparse":
+            edge_w, self_w = self._sparse_round_weights(key)
+            contrib = edge_w[:, None] * x[self.dst]
+            out = self_w[:, None] * x + jax.ops.segment_sum(
+                contrib, self.src, num_segments=self.n
+            )
+        else:
+            color_w, self_w = self.color_round_weights(key)
+            partners = jnp.asarray(self.partners)
+            sends = color_w[:, :, None] * x[None, :, :]  # (n_colors, n, k)
+            # node j receives what its colour-c partner sent: partners is an
+            # involution per colour, so gathering sends at partners[c] lands
+            # each edge's mass on the opposite endpoint.
+            recv = sends[jnp.arange(self.n_colors)[:, None], partners]
+            out = self_w[:, None] * x + recv.sum(axis=0)
+        return out[:, 0] if squeeze else out
+
     # ----------------------------------------------------- per-round weights
+    def round_masks(self, key: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Public alias of the per-round failure draws, for host-side
+        references that must key their Bernoullis identically (parity tests,
+        ``core.gossip.effective_send_matrix``)."""
+        return self._edge_node_masks(key)
+
     def _edge_node_masks(self, key: jax.Array) -> tuple[jax.Array, jax.Array]:
         """(edge_keep (n_edges,), node_active (n,)) — shared across backends."""
         k_link, k_node = jax.random.split(key)

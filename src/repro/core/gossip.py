@@ -11,18 +11,31 @@ the degree distribution.  Both are obtainable without coordination:
 * ``poll_degrees``      — random-walk degree polling with the excess-degree
                           (q(k)) bias corrected by importance re-weighting.
 
-These run on the same ``Graph``/receive-matrix machinery as DecAvg itself, so
-the estimation traffic is the same kind of neighbour exchange the training
-loop already performs.
+This module is the **host-side numpy reference**: it materialises dense
+O(n²) operators and exists to pin down semantics.  The production engine is
+``repro.gossip`` — jitted, ``lax.scan``-chunked programs over the CommPlan
+backends (dense / sparse / ppermute) with the same per-edge failure draws as
+training; its parity tests compare against the functions here.
+``effective_send_matrix`` / ``push_sum_failures`` /
+``power_iteration_norm_reference`` extend the reference to the failure and
+power-iteration semantics the engine implements.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .mixing import receive_matrix
+from .mixing import mixing_matrix
 from .topology import Graph
 
-__all__ = ["push_sum", "estimate_size", "estimate_mean_degree", "poll_degrees"]
+__all__ = [
+    "push_sum",
+    "estimate_size",
+    "estimate_mean_degree",
+    "poll_degrees",
+    "effective_send_matrix",
+    "push_sum_failures",
+    "power_iteration_norm_reference",
+]
 
 
 def push_sum(graph: Graph, values: np.ndarray, rounds: int) -> np.ndarray:
@@ -33,8 +46,6 @@ def push_sum(graph: Graph, values: np.ndarray, rounds: int) -> np.ndarray:
     n = graph.n
     # column-stochastic send operator: node j sends 1/(k_j+1) to each of
     # itself and its neighbours — mass-conserving, as push-sum requires.
-    from .mixing import mixing_matrix
-
     ap = mixing_matrix(graph)  # columns sum to 1
     s = np.asarray(values, dtype=np.float64).copy()
     w = np.ones(n, dtype=np.float64)
@@ -42,6 +53,101 @@ def push_sum(graph: Graph, values: np.ndarray, rounds: int) -> np.ndarray:
         s = ap @ s
         w = ap @ w
     return s / w
+
+
+def effective_send_matrix(
+    graph: Graph, edge_keep: np.ndarray | None = None, node_active: np.ndarray | None = None
+) -> np.ndarray:
+    """Column-stochastic send operator of one round under a failure draw.
+
+    ``edge_keep`` is indexed by ``Graph.edge_list()`` row (one Bernoulli per
+    *undirected* edge, both endpoints agreeing — the same keying as
+    ``CommPlan``'s training failures); ``node_active`` is per node.  An edge
+    is usable iff it survived and both endpoints are active; every node
+    always keeps its self-weight, so columns renormalise over the surviving
+    neighbourhood and the matrix stays mass-conserving.  With no failures
+    this is exactly ``mixing_matrix(graph)`` (Eq. 3); it also equals the
+    transpose of the unit-data-size effective *receive* operator, which is
+    what lets ``CommPlan.spread`` reuse the training backends.
+    """
+    n = graph.n
+    a = graph.adjacency.astype(np.float64).copy()
+    if edge_keep is not None:
+        edges = graph.edge_list()
+        dead = np.asarray(edge_keep) == 0
+        if dead.any():
+            u, v = edges[dead, 0], edges[dead, 1]
+            a[u, v] = 0.0
+            a[v, u] = 0.0
+    if node_active is not None:
+        act = np.asarray(node_active).astype(bool)
+        a = a * act[:, None] * act[None, :]
+    b = a + np.eye(n)
+    return b / b.sum(axis=0, keepdims=True)
+
+
+def push_sum_failures(
+    graph: Graph, values: np.ndarray, send_matrices: list[np.ndarray]
+) -> np.ndarray:
+    """Push-sum through an explicit per-round sequence of send operators.
+
+    Mass conservation makes the (s, w) ratio converge to the uniform average
+    even though each round's operator (a failure draw) differs — this is the
+    reference the engine's failure-parity tests integrate against.
+    """
+    s = np.asarray(values, dtype=np.float64).copy()
+    w = np.ones(graph.n, dtype=np.float64)
+    for ap in send_matrices:
+        s = ap @ s
+        w = ap @ w
+    return s / (w if s.ndim == 1 else w[:, None])
+
+
+def power_iteration_norm_reference(
+    graph: Graph,
+    pi_rounds: int,
+    ps_rounds: int,
+    leader: int = 0,
+    send_matrices: list[np.ndarray] | None = None,
+) -> dict[str, np.ndarray]:
+    """Numpy reference of the gossip ``‖v_steady‖`` estimator (`repro.gossip`).
+
+    Phase 1 (rounds ``0..pi_rounds``): power-iterate ``x ← A' x`` from
+    ``x₀ = 1``.  Mass conservation keeps ``Σx = n`` while ``A'^t → v·1ᵀ``,
+    so ``x → n·v`` without any explicit normalisation.
+
+    Phase 2 (rounds ``pi_rounds..pi_rounds+ps_rounds``): push-sum average of
+    the payload ``[x², 1_leader]`` → every node holds ``m2 ≈ n‖v‖²`` and
+    ``z ≈ 1/n``, hence the *per-round push-sum normalisation*
+    ``‖v̂‖ = √(m2·z)`` and ``n̂ = 1/z`` — all without coordination.
+
+    ``send_matrices``, when given, supplies the per-round effective
+    operators (length ``pi_rounds + ps_rounds``) of a failure draw.
+    """
+    n = graph.n
+    if send_matrices is None:
+        send_matrices = [mixing_matrix(graph)] * (pi_rounds + ps_rounds)
+    if len(send_matrices) != pi_rounds + ps_rounds:
+        raise ValueError(
+            f"need {pi_rounds + ps_rounds} per-round operators, got {len(send_matrices)}"
+        )
+    x = np.ones(n, dtype=np.float64)
+    for ap in send_matrices[:pi_rounds]:
+        x = ap @ x
+    one_hot = np.zeros(n, dtype=np.float64)
+    one_hot[leader] = 1.0
+    payload = np.stack([x**2, one_hot], axis=1)
+    avg = push_sum_failures(graph, payload, send_matrices[pi_rounds:])
+    m2, z = avg[:, 0], np.maximum(avg[:, 1], 1e-300)
+    return {
+        "vnorm": np.sqrt(np.maximum(m2 * z, 0.0)),
+        "n_hat": 1.0 / z,
+        "x": x,
+        # nodes the leader's mass never visited within the budget: their
+        # estimates are meaningless (the engine's gain builders fall back
+        # to gain = 1 there — see repro.gossip.make_gain_estimator)
+        "reached": avg[:, 1] > 1e-20,
+    }
 
 
 def estimate_size(graph: Graph, rounds: int, leader: int = 0) -> np.ndarray:
@@ -63,6 +169,13 @@ def poll_degrees(graph: Graph, start: int, walk_length: int, n_walks: int, seed:
     A simple random walk visits nodes ∝ degree (the excess-degree bias q(k),
     §3); with ``correct_bias`` we resample ∝ 1/k to recover p(k), which is the
     distribution ``v_steady_norm_from_degree_sample`` expects.
+
+    Degree-0 guard: a walker on a neighbourless node has nowhere to go —
+    ``indices[indptr[v] + 0]`` would silently read the *next* node's
+    adjacency (or fall off the array for the last node).  Starting on an
+    isolated node raises; walkers that reach one (possible only on directed
+    graphs with out-degree-0 sinks) stay put, mirroring the on-device
+    walker in ``repro.gossip.walker``.
     """
     rng = np.random.default_rng(seed)
     # vectorised transition sampling: all walks advance one step per
@@ -70,14 +183,30 @@ def poll_degrees(graph: Graph, start: int, walk_length: int, n_walks: int, seed:
     # instead of the O(n_walks · walk_length) Python loop.
     indptr, indices, _ = graph.csr()
     deg = (indptr[1:] - indptr[:-1]).astype(np.int64)
+    if deg[start] == 0:
+        raise ValueError(
+            f"poll_degrees: start node {start} has no neighbours — every walk "
+            "would be stuck and the 1/k bias correction would divide by zero"
+        )
     v = np.full(n_walks, start, dtype=np.int64)
     for _ in range(walk_length):
         u = rng.random(n_walks)
-        v = indices[indptr[v] + (u * deg[v]).astype(np.int64)]
+        alive = deg[v] > 0
+        step = indptr[v] + (u * deg[v]).astype(np.int64)
+        v = np.where(alive, indices[np.where(alive, step, 0)], v)
     ks = graph.degrees[v].astype(np.float64)
     if not correct_bias:
         return ks
-    # importance resample ∝ 1/k to undo the stationary ∝ k visit bias
-    p = (1.0 / ks) / (1.0 / ks).sum()
-    idx = rng.choice(len(ks), size=len(ks), p=p)
-    return ks[idx]
+    # importance resample ∝ 1/k to undo the stationary ∝ k visit bias.
+    # Walkers trapped on a degree-0 sink carry no degree information and
+    # would inject 1/0 into the weights — exclude them from the resample.
+    ok = np.nonzero(ks > 0)[0]
+    if len(ok) == 0:
+        raise ValueError(
+            "poll_degrees: every walk ended on a degree-0 sink — no degree "
+            "information to resample (is the graph mostly absorbing?)"
+        )
+    kk = ks[ok]
+    p = (1.0 / kk) / (1.0 / kk).sum()
+    idx = rng.choice(len(kk), size=len(ks), p=p)
+    return kk[idx]

@@ -46,11 +46,15 @@ class InitConfig:
     """How to initialise one node's parameters.
 
     gain: the paper's correction factor, ``‖v_steady‖⁻¹`` (1.0 reproduces the
-    *uncorrected* He-et-al. baseline of Fig. 1, dashed lines).
+    *uncorrected* He-et-al. baseline of Fig. 1, dashed lines).  May be a
+    traced 0-d jax scalar: per-node gains are applied by vmapping the init
+    over ``(key, gain)`` pairs (``fed.trainer.init_fl_state(gains=...)``),
+    each lane seeing ``cfg.replace(gain=g_i)`` — the initialisers below are
+    linear in ``gain``, so tracing it costs nothing.
     """
 
     distribution: Distribution = "he_normal"
-    gain: float = 1.0
+    gain: float | jax.Array = 1.0
 
     def replace(self, **kw) -> "InitConfig":
         return dataclasses.replace(self, **kw)
@@ -66,21 +70,46 @@ def gain_from_graph(graph: Graph) -> float:
 
 
 def gain_from_estimates(
-    n_estimate: float,
+    n_estimate: float | np.ndarray,
     degree_sample: np.ndarray | None = None,
     family_exponent: float | None = None,
-) -> float:
-    """Imperfect-knowledge gain (§4.4).
+) -> float | np.ndarray:
+    """Imperfect-knowledge gain (§4.4), vectorised over per-node estimates.
 
-    Priority: a sampled degree distribution (gossip poll) → closed-form ‖v‖
-    estimate; else a known family exponent α with ``‖v‖ = n^-α`` (α = 1/2 for
-    homogeneous graphs, Fig. 5); else assume homogeneous (α = 1/2 ⇒ gain = √n).
+    Exactly one knowledge source may be given, and the priority order is:
+
+    1. ``degree_sample`` — a polled degree distribution (gossip random walk)
+       → closed-form ‖v̂‖ via ``v_steady_norm_from_degree_sample``;
+    2. ``family_exponent`` — a known network-formation exponent α with
+       ``‖v‖ = n^-α`` (α = 1/2 for homogeneous graphs, Fig. 5);
+    3. neither — assume homogeneous (α = 1/2 ⇒ gain = √n̂).
+
+    Passing both ``degree_sample`` and ``family_exponent`` raises: the two
+    encode contradictory knowledge and the old behaviour of silently
+    ignoring the exponent hid caller bugs.
+
+    Vectorised: ``n_estimate`` may be an (n,) vector of per-node estimates
+    (the truly uncoordinated setting — every node trusts only its own
+    gossip), and ``degree_sample`` may be (m,) shared or (n, m) per node.
+    Scalar inputs return a float, array inputs an (n,) array.  Device
+    mirror: ``repro.gossip.gains_from_estimates`` (fp32-parity tested).
     Fig. 4 shows the method is robust to substantial mis-estimation of n.
     """
+    if degree_sample is not None and family_exponent is not None:
+        raise ValueError(
+            "gain_from_estimates: give either degree_sample or "
+            "family_exponent, not both — a polled degree distribution "
+            "already determines the ‖v‖ estimate (priority 1), so an "
+            "exponent alongside it would be silently ignored"
+        )
+    n_est = np.asarray(n_estimate, dtype=np.float64)
     if degree_sample is not None:
-        return 1.0 / v_steady_norm_from_degree_sample(np.asarray(degree_sample), int(round(n_estimate)))
-    alpha = 0.5 if family_exponent is None else family_exponent
-    return float(n_estimate**alpha)
+        out = 1.0 / v_steady_norm_from_degree_sample(degree_sample, np.round(n_est))
+    else:
+        alpha = 0.5 if family_exponent is None else family_exponent
+        out = n_est**alpha
+    out = np.asarray(out)
+    return float(out) if out.ndim == 0 else out
 
 
 def _fans(shape: tuple[int, ...]) -> tuple[float, float]:

@@ -124,14 +124,23 @@ def v_steady_norm_closed_form(degrees: np.ndarray) -> float:
     return float(np.sqrt((k1**2).sum()) / k1.sum())
 
 
-def v_steady_norm_from_degree_sample(degree_sample: np.ndarray, n: int) -> float:
+def v_steady_norm_from_degree_sample(
+    degree_sample: np.ndarray, n: int | float | np.ndarray
+) -> float | np.ndarray:
     """Estimate ``‖v_steady‖`` from a degree *sample* plus an estimate of n (§4.4).
 
     ``‖v‖² = Σ(k+1)² / (Σ(k+1))² ≈ ⟨(k+1)²⟩ / (n ⟨k+1⟩²)`` — this is what a
     node can compute after polling degrees through a gossip protocol.
+
+    Vectorised over per-node estimates: ``degree_sample`` may be (m,) shared
+    or (..., m) per node, ``n`` a scalar or matching array; scalar inputs
+    return a float (device mirror: ``repro.gossip.gain_from_degree_sample``).
     """
     k1 = np.asarray(degree_sample, dtype=np.float64) + 1.0
-    return float(np.sqrt((k1**2).mean() / (n * (k1.mean() ** 2))))
+    out = np.sqrt(
+        (k1**2).mean(axis=-1) / (np.asarray(n, np.float64) * k1.mean(axis=-1) ** 2)
+    )
+    return float(out) if out.ndim == 0 else out
 
 
 def spectral_gap(graph: Graph, self_weights: np.ndarray | None = None) -> float:

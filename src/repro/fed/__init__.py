@@ -1,4 +1,11 @@
 """Decentralised federated runtime: vectorised node-ensemble trainer + serving."""
-from .executor import TrajectoryConfig, run_sweep, run_trajectory, stack_states, unstack_states
+from .executor import (
+    TrajectoryConfig,
+    run_sweep,
+    run_trajectory,
+    run_warmup_trajectory,
+    stack_states,
+    unstack_states,
+)
 from .serve import consensus_params, decode_one, generate, prefill
 from .trainer import DFLState, init_fl_state, make_eval_fn, make_round_fn, sigma_metrics, train_loop

@@ -19,6 +19,10 @@ trajectory (DESIGN.md §11):
 * **sweep axis** — ``run_sweep`` vmaps the whole scanned trajectory over a
   leading run axis (seeds × gains × ...), so a figure's grid of trajectories
   compiles to a handful of programs.
+* **warmup phase** — ``run_warmup_trajectory`` prepends the uncoordinated-
+  init estimation phase (``repro.gossip``): gossip estimates → per-node
+  gains → vmapped init → first training chunk, fused as one program
+  (DESIGN.md §12).
 
 ``round_fn`` is exactly the function ``make_round_fn`` builds — the executor
 re-uses it unchanged, which is what makes executor-vs-legacy parity
@@ -33,11 +37,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .trainer import DFLState, sigma_metrics
+from .trainer import DFLState, init_fl_state, sigma_metrics
 
 PyTree = Any
 
-__all__ = ["TrajectoryConfig", "run_trajectory", "run_sweep", "stack_states", "unstack_states"]
+__all__ = [
+    "TrajectoryConfig",
+    "run_trajectory",
+    "run_warmup_trajectory",
+    "run_sweep",
+    "stack_states",
+    "unstack_states",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,9 +183,11 @@ def _build_chunk_fn(
     # Donating the carried state lets XLA reuse the ensemble's buffers across
     # chunk calls (a no-op warning-free pass-through on CPU).  _drive_chunks
     # copies the caller's state before the first call so donation never
-    # invalidates it (train_loop drop-in contract).
+    # invalidates it (train_loop drop-in contract).  The raw (unjitted)
+    # chunk is returned too so ``run_warmup_trajectory`` can inline it after
+    # its estimation/init prologue inside one fused program.
     donate = jax.default_backend() != "cpu"
-    return jax.jit(chunk, donate_argnums=(0,) if donate else ()), donate
+    return jax.jit(chunk, donate_argnums=(0,) if donate else ()), donate, chunk
 
 
 def _empty_history() -> dict[str, list]:
@@ -199,14 +212,22 @@ def _assemble_history(
     return hist
 
 
-def _drive_chunks(chunk_fn, state, sched_d, mask_np, cfg, *, round_axis: int = 0, donate: bool = False):
-    """Run the chunk schedule; one host sync, after the last chunk."""
+def _drive_chunks(
+    chunk_fn, state, sched_d, mask_np, cfg, *,
+    round_axis: int = 0, donate: bool = False, skip: int = 0, head_outs=(),
+):
+    """Run the chunk schedule; one host sync, after the last chunk.
+
+    ``skip``/``head_outs`` let a caller that already executed the first
+    ``skip`` chunks through a different program (the fused warmup) hand over
+    their metric buffers and continue here.
+    """
     if donate:
         # first chunk call would otherwise donate (delete) the caller's state
         state = jax.tree_util.tree_map(jnp.copy, state)
     mask_d = jnp.asarray(mask_np)
-    outs = []
-    for r0, r1 in cfg.chunks():
+    outs = list(head_outs)
+    for r0, r1 in cfg.chunks()[skip:]:
         sched_c = jax.lax.slice_in_dim(sched_d, r0, r1, axis=round_axis)
         state, out = chunk_fn(state, sched_c, mask_d[r0:r1])
         outs.append(out)
@@ -244,10 +265,79 @@ def run_trajectory(
     sched_d = jnp.asarray(_as_round_schedule(schedule, n_rounds, b_local))
     xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
     eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
-    chunk_fn, donate = _build_chunk_fn(round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas)
+    chunk_fn, donate, _ = _build_chunk_fn(round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas)
     state, cols = _drive_chunks(chunk_fn, state, sched_d, cfg.eval_mask(), cfg, donate=donate)
     hist = _assemble_history(cfg.eval_mask(), cols, eval_fn is not None, track_sigmas)
     return state, hist
+
+
+def run_warmup_trajectory(
+    key: jax.Array,
+    round_fn: Callable[[DFLState, Any], tuple[DFLState, dict]],
+    xs: np.ndarray,
+    ys: np.ndarray,
+    schedule: np.ndarray,
+    *,
+    n_nodes: int,
+    init_one: Callable[[jax.Array, jax.Array], PyTree],
+    optimizer,
+    estimate_gains: Callable[[jax.Array], jax.Array],
+    n_rounds: int,
+    eval_every: int = 0,
+    eval_fn=None,
+    eval_batch=None,
+    track_sigmas: bool = False,
+    chunk_size: int = 0,
+    b_local: int | None = None,
+) -> tuple[DFLState, dict[str, list], np.ndarray]:
+    """Fused **estimate → per-node gain → init → train** trajectory (§4.4).
+
+    The uncoordinated-init warmup phase: ``estimate_gains`` (a pure-jax
+    ``key → (n,) gains`` function, e.g. ``repro.gossip.make_gain_estimator``)
+    runs the gossip protocols over the CommPlan backends, ``init_fl_state``
+    draws every node's parameters with its own gain, and the first training
+    chunk scans on — all inside ONE jitted program, so there is no host
+    round-trip between the estimation and training phases and the
+    estimation traffic shares the device residency of the round loop.
+    Remaining chunks run through the same chunk program ``run_trajectory``
+    uses.
+
+    Key discipline: ``key`` splits once into (estimation key, init key);
+    running ``estimate_gains`` + ``init_fl_state(gains=...)`` +
+    ``run_trajectory`` by hand with the same split reproduces this function
+    (property-tested in tests/test_gossip_engine.py).
+
+    Returns ``(final_state, history, gains)`` with ``gains`` the realised
+    (n,) per-node vector, for inspection/logging.
+    """
+    cfg = TrajectoryConfig(n_rounds, eval_every, track_sigmas, chunk_size)
+    sched_d = jnp.asarray(_as_round_schedule(schedule, n_rounds, b_local))
+    xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
+    eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
+    chunk_fn, _, chunk_raw = _build_chunk_fn(
+        round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas
+    )
+
+    @jax.jit
+    def warmup_chunk(k, sched_c, mask_c):
+        k_est, k_init = jax.random.split(k)
+        gains = estimate_gains(k_est)
+        state = init_fl_state(k_init, n_nodes, init_one, optimizer, gains=gains)
+        state, out = chunk_raw(state, sched_c, mask_c)
+        return state, out, gains
+
+    mask_np = cfg.eval_mask()
+    r0, r1 = cfg.chunks()[0]
+    state, out, gains = warmup_chunk(
+        key, jax.lax.slice_in_dim(sched_d, r0, r1, axis=0), jnp.asarray(mask_np[r0:r1])
+    )
+    # later chunks may donate `state` — it was created inside warmup_chunk,
+    # so no caller-owned buffer is ever invalidated (donate=False: no copy)
+    state, cols = _drive_chunks(
+        chunk_fn, state, sched_d, mask_np, cfg, skip=1, head_outs=[out]
+    )
+    hist = _assemble_history(mask_np, cols, eval_fn is not None, track_sigmas)
+    return state, hist, np.asarray(gains)
 
 
 def run_sweep(
@@ -287,7 +377,7 @@ def run_sweep(
     sched_d = jnp.asarray(sched)
     xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
     eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
-    chunk_fn, donate = _build_chunk_fn(
+    chunk_fn, donate, _ = _build_chunk_fn(
         round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas,
         sweep=True, schedule_mapped=schedule_per_run,
     )

@@ -56,13 +56,28 @@ class DFLState:
 def init_fl_state(
     key: jax.Array,
     n_nodes: int,
-    init_one: Callable[[jax.Array], PyTree],
+    init_one: Callable[..., PyTree],
     optimizer: Optimizer,
+    gains: jax.Array | np.ndarray | None = None,
 ) -> DFLState:
     """Uncoordinated init: every node draws independently (distinct keys) —
-    the paper's premise w_i ≠ w_j at t=0 (§3)."""
+    the paper's premise w_i ≠ w_j at t=0 (§3).
+
+    ``gains``: optional (n,) per-node init gain vector (or scalar,
+    broadcast) — each node's own ``‖v̂_steady‖⁻¹`` from its gossip estimates
+    (§4.4, ``repro.gossip``).  When given, ``init_one`` must accept
+    ``(key, gain)`` and apply the gain to its random draws (e.g.
+    ``lambda k, g: init_mlp(icfg.replace(gain=g), k)``).  Without it the
+    single-gain ``init_one(key)`` contract is unchanged.  Fully traceable,
+    so the fused warmup can inline estimation → init → training in one
+    program (``fed.executor.run_warmup_trajectory``).
+    """
     keys = jax.random.split(key, n_nodes + 1)
-    params = jax.vmap(init_one)(keys[:n_nodes])
+    if gains is None:
+        params = jax.vmap(init_one)(keys[:n_nodes])
+    else:
+        g = jnp.broadcast_to(jnp.asarray(gains, jnp.float32), (n_nodes,))
+        params = jax.vmap(init_one)(keys[:n_nodes], g)
     opt_state = jax.vmap(optimizer.init)(params)
     return DFLState(params=params, opt_state=opt_state, round=jnp.zeros((), jnp.int32), rng=keys[-1])
 

@@ -1,0 +1,51 @@
+"""repro.gossip — device-resident estimation engine for uncoordinated init.
+
+Gossip protocols (push-sum, power-iteration centrality, random-walk degree
+polling) executed as jitted programs over the same ``CommPlan`` mixing
+backends — and the same per-edge failure draws — as DecAvg training, so the
+"uncoordinated" in uncoordinated initialisation is real: every node derives
+its own gain ``‖v̂_steady‖⁻¹`` from traffic on its own unreliable links.
+Host numpy reference: ``repro.core.gossip``; fused estimate→init→train:
+``repro.fed.executor.run_warmup_trajectory``.
+"""
+from .diagnostics import (
+    convergence_report,
+    fit_contraction_rate,
+    predicted_contraction_rate,
+    relative_error_trace,
+    size_error_trace,
+)
+from .engine import (
+    GossipEstimates,
+    as_plan,
+    estimate_all,
+    estimate_mean_degree,
+    estimate_size,
+    gain_from_degree_sample,
+    gains_from_estimates,
+    make_gain_estimator,
+    power_iteration_norm,
+    push_sum,
+    spread_rounds,
+)
+from .walker import poll_degrees_device
+
+__all__ = [
+    "GossipEstimates",
+    "as_plan",
+    "convergence_report",
+    "estimate_all",
+    "estimate_mean_degree",
+    "estimate_size",
+    "fit_contraction_rate",
+    "gain_from_degree_sample",
+    "gains_from_estimates",
+    "make_gain_estimator",
+    "poll_degrees_device",
+    "power_iteration_norm",
+    "predicted_contraction_rate",
+    "push_sum",
+    "relative_error_trace",
+    "size_error_trace",
+    "spread_rounds",
+]

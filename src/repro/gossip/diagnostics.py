@@ -1,0 +1,95 @@
+"""Convergence diagnostics for the gossip engine (paper §4.5).
+
+Push-sum error contracts asymptotically like ``|λ₂|^t`` where λ₂ is the
+second-largest-magnitude eigenvalue of the send operator A' — i.e. the rate
+is keyed to the spectral gap ``1 - |λ₂|`` exactly like the σ_an
+stabilisation time of the training dynamics (``core.mixing.spectral_gap``).
+These helpers turn an engine trace into per-node relative-error curves and a
+fitted per-round contraction rate so an estimation *budget* (rounds) can be
+chosen per topology instead of guessed.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.commplan import CommPlan
+from repro.core.mixing import spectral_gap
+from repro.core.topology import Graph
+
+from .engine import as_plan, push_sum
+
+__all__ = [
+    "relative_error_trace",
+    "size_error_trace",
+    "fit_contraction_rate",
+    "predicted_contraction_rate",
+    "convergence_report",
+]
+
+
+def relative_error_trace(trace, truth) -> np.ndarray:
+    """(rounds, n[, k]) per-round estimates → per-node |est − truth|/|truth|."""
+    tr = np.asarray(trace, dtype=np.float64)
+    t = np.asarray(truth, dtype=np.float64)
+    return np.abs(tr - t) / np.maximum(np.abs(t), 1e-300)
+
+
+def size_error_trace(
+    plan: CommPlan | Graph, rounds: int, key=None, *, leader: int = 0
+) -> np.ndarray:
+    """(rounds, n) relative error of every node's size estimate vs rounds.
+
+    The canonical diagnostic: the one-hot average is the slowest-mixing
+    payload (a point mass), so its error curve upper-bounds the degree /
+    moment payloads sharing the same rounds.
+    """
+    plan = as_plan(plan)
+    one_hot = jnp.zeros(plan.n, jnp.float32).at[leader].set(1.0)
+    _, tr = push_sum(plan, one_hot, rounds, key, trace=True)
+    n_hat = 1.0 / np.maximum(np.asarray(tr, np.float64), 1e-300)
+    return relative_error_trace(n_hat, float(plan.n))
+
+
+def fit_contraction_rate(max_err: np.ndarray, floor: float = 1e-6) -> float:
+    """Least-squares per-round contraction from a max-over-nodes error curve.
+
+    Fits ``log err_t ~ t·log ρ`` over the clean window: after the transient
+    (first quarter) and above the fp32 noise floor.  Returns ρ (ρ < 1 means
+    converging; smaller is faster).
+    """
+    err = np.asarray(max_err, dtype=np.float64)
+    t = np.arange(len(err))
+    lo = len(err) // 4
+    keep = (t >= lo) & (err > floor) & np.isfinite(err)
+    if keep.sum() < 2:
+        return float("nan")
+    slope = np.polyfit(t[keep], np.log(err[keep]), 1)[0]
+    return float(np.exp(slope))
+
+
+def predicted_contraction_rate(graph: Graph) -> float:
+    """``|λ₂| = 1 − spectral_gap``: the asymptotic per-round factor."""
+    return 1.0 - spectral_gap(graph)
+
+
+def convergence_report(
+    plan: CommPlan | Graph, rounds: int, key=None, *, leader: int = 0
+) -> dict:
+    """Measured-vs-predicted convergence of the size estimator.
+
+    Returns ``{rel_err: (rounds, n), max_rel_err: (rounds,), fitted_rate,
+    predicted_rate, rounds_to_1pct}`` — the last being the measured budget
+    for every node to reach 1% relative error (or -1 if not reached).
+    """
+    plan = as_plan(plan)
+    rel = size_error_trace(plan, rounds, key, leader=leader)
+    max_err = rel.max(axis=1)
+    hit = np.nonzero(max_err < 1e-2)[0]
+    return {
+        "rel_err": rel,
+        "max_rel_err": max_err,
+        "fitted_rate": fit_contraction_rate(max_err),
+        "predicted_rate": predicted_contraction_rate(plan.graph),
+        "rounds_to_1pct": int(hit[0]) if len(hit) else -1,
+    }

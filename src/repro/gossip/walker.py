@@ -1,0 +1,106 @@
+"""On-device random-walk degree polling (paper §3/§4.4, ref [35]).
+
+Jitted rendering of ``core.gossip.poll_degrees``: all walkers advance one
+CSR transition per ``lax.scan`` step, so a (starts × n_walks) fleet costs
+O(walk_length) fused gathers instead of a Python loop.  A simple random walk
+visits nodes ∝ degree (the excess-degree bias q(k)); ``correct_bias``
+importance-resamples ∝ 1/k on device (``jax.random.categorical``) to recover
+p(k), the distribution ``v_steady_norm_from_degree_sample`` expects.
+
+Degree-0 guard (mirrors the host reference): a walker whose current node has
+no neighbours *stays put* instead of indexing into the next node's CSR
+segment, and walkers that end on such a sink are excluded from the 1/k
+resample (they carry no degree information).  Start nodes are validated
+host-side — they are static — because a stuck fleet would feed k = 0 into
+the correction.
+
+Failure model: pass the training ``CommPlan`` as ``plan`` and each step
+draws the same per-edge/per-node Bernoullis as a training round
+(``CommPlan.round_masks``); an attempted transition over a failed link (or
+to/from an inactive node) keeps the walker in place for that step, so the
+degree poll rides exactly the unreliable links the §4.4 contract promises.
+The host numpy reference remains failure-free (statistical, not drawn-mask,
+parity is what the tests assert for this pathway).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.commplan import CommPlan
+from repro.core.topology import Graph
+
+__all__ = ["poll_degrees_device"]
+
+
+def poll_degrees_device(
+    graph: Graph,
+    start: int | jax.Array,
+    *,
+    walk_length: int,
+    n_walks: int,
+    key: jax.Array,
+    correct_bias: bool = True,
+    plan: CommPlan | None = None,
+) -> jax.Array:
+    """Run ``n_walks`` walks of ``walk_length`` steps from each start node.
+
+    ``start``: a scalar node id → returns (n_walks,) polled degrees; an (s,)
+    array of ids (e.g. ``arange(n)`` for every-node-polls-itself, the truly
+    uncoordinated setting) → returns (s, n_walks).  Fully traceable, so the
+    fused warmup can inline it next to the push-sum phases.
+    """
+    indptr_np, indices_np, uid_np = graph.csr()
+    if len(indices_np) == 0:
+        raise ValueError("poll_degrees_device: graph has no edges — nothing to poll")
+    deg_np = (indptr_np[1:] - indptr_np[:-1]).astype(np.int32)
+    starts_np = np.atleast_1d(np.asarray(start))
+    if np.any(deg_np[starts_np] == 0):
+        bad = starts_np[deg_np[starts_np] == 0]
+        raise ValueError(
+            f"poll_degrees_device: start node(s) {bad.tolist()} have no "
+            "neighbours — every walk would be stuck and the 1/k bias "
+            "correction would divide by zero"
+        )
+    indptr = jnp.asarray(indptr_np[:-1])
+    indices = jnp.asarray(indices_np)
+    uid = jnp.asarray(uid_np)
+    deg = jnp.asarray(deg_np)
+    degrees = jnp.asarray(graph.degrees, jnp.float32)
+    with_failures = plan is not None and plan.failures.active
+
+    squeeze = np.ndim(start) == 0
+    v = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(start, jnp.int32))[:, None],
+                         (len(starts_np), n_walks))
+
+    k_walk, k_resample = jax.random.split(key)
+
+    def step(v, k):
+        if with_failures:
+            k, k_fail = jax.random.split(k)
+        u = jax.random.uniform(k, v.shape)
+        d = deg[v]
+        idx = jnp.where(d > 0, indptr[v] + (u * d).astype(jnp.int32), 0)
+        nxt = indices[idx]
+        ok = d > 0
+        if with_failures:
+            # one training-style failure draw per walk step: a failed link
+            # (or inactive endpoint) bounces the walker back for this step
+            edge_keep, active = plan.round_masks(k_fail)
+            ok = ok & edge_keep[uid[idx]] & active[v] & active[nxt]
+        return jnp.where(ok, nxt, v), None
+
+    v, _ = jax.lax.scan(step, v, jax.random.split(k_walk, walk_length))
+    ks = degrees[v]  # (s, n_walks)
+    if correct_bias:
+        # importance resample ∝ 1/k, per start row, to undo the ∝ k visit
+        # bias; sink-trapped walkers (k = 0) carry no degree information and
+        # are excluded via a large negative logit
+        logits = jnp.where(ks > 0, -jnp.log(jnp.maximum(ks, 1e-30)), -1e30)
+        rows = jax.random.split(k_resample, ks.shape[0])
+        idx = jax.vmap(
+            lambda k, lg: jax.random.categorical(k, lg, shape=(n_walks,))
+        )(rows, logits)
+        ks = jnp.take_along_axis(ks, idx, axis=1)
+    return ks[0] if squeeze else ks

@@ -9,6 +9,9 @@ Examples:
     python -m repro.launch.train --model cnn --topology ba --rounds 50
     python -m repro.launch.train --arch qwen2.5-3b --reduced --rounds 30
     python -m repro.launch.train --model mlp --no-gain-correction   # Fig.1 baseline
+    # truly uncoordinated: per-node gains from on-device gossip estimation,
+    # fused estimate→init→train (no host round-trip between phases)
+    python -m repro.launch.train --model mlp --topology ba --uncoordinated-init --estimate-rounds 24
 """
 from __future__ import annotations
 
@@ -22,6 +25,7 @@ import numpy as np
 from repro.checkpoint import save_train_state
 from repro.configs import get_reduced_config
 from repro.core import topology as T
+from repro.core.commplan import FailureModel, compile_plan
 from repro.core.initialisation import InitConfig, gain_from_graph
 from repro.data import (
     batch_index_schedule,
@@ -35,7 +39,15 @@ from repro.data import (
     so2sat_like,
     token_batch_iterator,
 )
-from repro.fed import init_fl_state, make_eval_fn, make_round_fn, run_trajectory, train_loop
+from repro.fed import (
+    init_fl_state,
+    make_eval_fn,
+    make_round_fn,
+    run_trajectory,
+    run_warmup_trajectory,
+    train_loop,
+)
+from repro.gossip import make_gain_estimator
 from repro.models import transformer as TF
 from repro.models.paper_models import classifier_loss, cnn_forward, init_cnn, init_mlp, init_vgg16, mlp_forward, vgg16_forward
 from repro.optim import adamw, sgd
@@ -71,6 +83,16 @@ def main() -> None:
     p.add_argument("--node-p", type=float, default=1.0)
     p.add_argument("--no-gain-correction", action="store_true")
     p.add_argument(
+        "--uncoordinated-init", action="store_true",
+        help="per-node gains from on-device gossip estimation (repro.gossip) "
+        "instead of the perfect-knowledge gain_from_graph; estimation rides "
+        "the same failure-prone links as training",
+    )
+    p.add_argument("--estimate-rounds", type=int, default=32,
+                   help="gossip budget: power-iteration and push-sum rounds each")
+    p.add_argument("--estimate-mode", choices=["vnorm", "alpha", "degree"], default="vnorm",
+                   help="§4.4 knowledge regime: gossip ‖v̂‖ / size-only n̂^α / degree polling")
+    p.add_argument(
         "--legacy-loop", action="store_true",
         help="per-round dispatch via train_loop instead of the fused executor",
     )
@@ -79,6 +101,9 @@ def main() -> None:
     p.add_argument("--ckpt-dir", type=str, default=None)
     p.add_argument("--history-out", type=str, default=None)
     args = p.parse_args()
+    if args.uncoordinated_init and args.no_gain_correction:
+        p.error("--uncoordinated-init estimates (and applies) per-node gains; "
+                "it contradicts --no-gain-correction — pick one")
 
     n = args.nodes
     graph = build_graph(args.topology, n, args.seed)
@@ -102,7 +127,7 @@ def main() -> None:
                 bs = [next(it) for _ in range(args.local_batches)]
                 yield (np.stack([b.x for b in bs], 1), np.stack([b.y for b in bs], 1))
 
-        init_one = lambda k: TF.init_params(k, cfg, icfg)
+        init_with = lambda c: (lambda k: TF.init_params(k, cfg, c))
         eval_batch = None
         eval_fn = None
     else:
@@ -118,13 +143,15 @@ def main() -> None:
         eval_batch = (ds.x[-1024:], ds.y[-1024:])
         icfg = InitConfig("he_normal", gain)
         if model == "mlp":
-            init_one = lambda k: init_mlp(icfg, k)
+            init_with = lambda c: (lambda k: init_mlp(c, k))
             fwd = mlp_forward
         elif model == "cnn":
-            init_one = lambda k: init_cnn(icfg, k, image_shape=ds.x.shape[1:], n_classes=ds.n_classes)
+            init_with = lambda c: (lambda k: init_cnn(c, k, image_shape=ds.x.shape[1:], n_classes=ds.n_classes))
             fwd = cnn_forward
         else:
-            init_one = lambda k: init_vgg16(icfg, k, image_shape=ds.x.shape[1:], n_classes=ds.n_classes, width_mult=0.25)
+            init_with = lambda c: (
+                lambda k: init_vgg16(c, k, image_shape=ds.x.shape[1:], n_classes=ds.n_classes, width_mult=0.25)
+            )
             fwd = vgg16_forward
         loss_fn = lambda p, b: classifier_loss(fwd(p, b[0]), b[1])
         eval_fn = make_eval_fn(loss_fn)
@@ -135,12 +162,32 @@ def main() -> None:
                 bs = [next(it) for _ in range(args.local_batches)]
                 yield (np.stack([b.x for b in bs], 1), np.stack([b.y for b in bs], 1))
 
-    state = init_fl_state(jax.random.PRNGKey(args.seed), n, init_one, opt)
+    init_one = init_with(icfg)
+    init_one_g = lambda k, gn: init_with(icfg.replace(gain=gn))(k)
+    key = jax.random.PRNGKey(args.seed)
     round_fn = make_round_fn(loss_fn, opt, graph, link_p=args.link_p, node_p=args.node_p)
     eval_every = max(1, args.rounds // 20)
+    estimate_fn = None
+    if args.uncoordinated_init:
+        # estimation rides the same links — and the same failure model — as
+        # the training rounds (unit-weight plan: Eq. 3 send operator)
+        est_plan = compile_plan(
+            graph, failures=FailureModel(link_p=args.link_p, node_p=args.node_p)
+        )
+        estimate_fn = make_gain_estimator(
+            est_plan, pi_rounds=args.estimate_rounds, ps_rounds=args.estimate_rounds,
+            mode=args.estimate_mode,
+        )
     if args.arch or args.legacy_loop:
         # token streams sample per-batch windows (no gather schedule yet), so
         # the arch path stays on the host-driven loop
+        if estimate_fn is None:
+            state = init_fl_state(key, n, init_one, opt)
+        else:
+            k_est, k_init = jax.random.split(key)
+            gains = np.asarray(jax.jit(estimate_fn)(k_est))
+            print(f"gossip gains: mean={gains.mean():.2f} min={gains.min():.2f} max={gains.max():.2f}")
+            state = init_fl_state(k_init, n, init_one_g, opt, gains=gains)
         state, hist = train_loop(
             state, round_fn, batches(), n_rounds=args.rounds, eval_every=eval_every,
             eval_fn=eval_fn, eval_batch=eval_batch, track_sigmas=True, progress=True,
@@ -149,11 +196,21 @@ def main() -> None:
         sched = batch_index_schedule(
             ys.shape[1], n, args.batch_size, args.rounds * args.local_batches, seed=args.seed
         )
-        state, hist = run_trajectory(
-            state, round_fn, xs, ys, sched, n_rounds=args.rounds, eval_every=eval_every,
-            eval_fn=eval_fn, eval_batch=eval_batch, track_sigmas=True,
-            chunk_size=args.chunk_rounds, b_local=args.local_batches,
+        common = dict(
+            n_rounds=args.rounds, eval_every=eval_every, eval_fn=eval_fn,
+            eval_batch=eval_batch, track_sigmas=True, chunk_size=args.chunk_rounds,
+            b_local=args.local_batches,
         )
+        if estimate_fn is None:
+            state = init_fl_state(key, n, init_one, opt)
+            state, hist = run_trajectory(state, round_fn, xs, ys, sched, **common)
+        else:
+            # fused warmup: estimate → per-node gain → init → train is one program
+            state, hist, gains = run_warmup_trajectory(
+                key, round_fn, xs, ys, sched, n_nodes=n, init_one=init_one_g,
+                optimizer=opt, estimate_gains=estimate_fn, **common,
+            )
+            print(f"gossip gains: mean={gains.mean():.2f} min={gains.min():.2f} max={gains.max():.2f}")
         for i, r in enumerate(hist["round"]):
             print(f"round {r:4d} train {hist['train_loss'][i]:.4f} test {hist['test_loss'][i]:.4f}", flush=True)
     if args.ckpt_dir:

@@ -1,0 +1,361 @@
+"""Parity + convergence tests for the device gossip engine (repro.gossip).
+
+The contract (DESIGN.md §12): the engine is a jitted rendering of the numpy
+reference protocols in ``core.gossip``, executed over the CommPlan backends
+with failure draws keyed identically to training.  So for any topology
+family, any backend and any failure draw, the engine's estimates must match
+the reference integrated through the same per-round effective operators —
+and, given enough rounds, the exact spectral quantities of ``core.mixing``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+from test_commplan import FAMILIES
+
+from repro.core import gossip as G
+from repro.core import mixing as M
+from repro.core import topology as T
+from repro.core.commplan import BACKENDS, FailureModel, compile_plan
+from repro.core.initialisation import gain_from_estimates
+import repro.gossip as gsp
+
+
+def _send_matrices(plan, key, rounds, offset=0):
+    """Replay the engine's per-round failure draws (fold_in(key, r)) into the
+    numpy reference's effective send operators."""
+    mats = []
+    for r in range(offset, offset + rounds):
+        ek, na = plan.round_masks(jax.random.fold_in(key, r))
+        mats.append(
+            G.effective_send_matrix(
+                plan.graph, np.asarray(ek)[: plan.n_edges], np.asarray(na)
+            )
+        )
+    return mats
+
+
+# ------------------------------------------------------------ push-sum parity
+@settings(max_examples=10, deadline=None)
+@given(
+    family=st.sampled_from(sorted(FAMILIES)),
+    backend=st.sampled_from(BACKENDS),
+    link_p=st.sampled_from([1.0, 0.6]),
+    seed=st.integers(0, 5),
+)
+def test_push_sum_parity_property(family, backend, link_p, seed):
+    g = FAMILIES[family](16, seed)
+    vals = np.linspace(-3.0, 5.0, g.n)
+    rounds = 40
+    fm = FailureModel(link_p=link_p)
+    plan = compile_plan(g, backend, failures=fm)
+    key = jax.random.PRNGKey(seed * 13 + 1) if fm.active else None
+    out = np.asarray(gsp.push_sum(plan, vals, rounds, key))
+    if fm.active:
+        ref = G.push_sum_failures(g, vals, _send_matrices(plan, key, rounds))
+    else:
+        ref = G.push_sum(g, vals, rounds)
+    assert np.abs(out - ref).max() < 1e-3, (family, backend)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_push_sum_parity_exhaustive(family):
+    """Full backend × failure sweep per family: engine vs numpy reference vs
+    the true average."""
+    g = FAMILIES[family](16, 3)
+    vals = np.arange(g.n, dtype=float)
+    key = jax.random.PRNGKey(7)
+    for backend in BACKENDS:
+        plan = compile_plan(g, backend)
+        out = np.asarray(gsp.push_sum(plan, vals, 300))
+        assert np.abs(out - G.push_sum(g, vals, 300)).max() < 1e-3, backend
+        assert np.abs(out - vals.mean()).max() < 1e-2, backend
+        planf = compile_plan(g, backend, failures=FailureModel(link_p=0.7, node_p=0.9))
+        outf = np.asarray(gsp.push_sum(planf, vals, 60, key))
+        reff = G.push_sum_failures(g, vals, _send_matrices(planf, key, 60))
+        assert np.abs(outf - reff).max() < 1e-3, backend
+
+
+def test_spread_is_mass_conserving_under_failures():
+    g = T.configuration_heavy_tail(48, 2.2, seed=0)
+    vals = jnp.asarray(np.random.default_rng(0).normal(size=(48, 3)), jnp.float32)
+    for backend in BACKENDS:
+        plan = compile_plan(g, backend, failures=FailureModel(link_p=0.5, node_p=0.7))
+        out = plan.spread(vals, jax.random.PRNGKey(3))
+        np.testing.assert_allclose(
+            np.asarray(out.sum(0)), np.asarray(vals.sum(0)), rtol=1e-5
+        )
+
+
+# ----------------------------------------------------- power-iteration parity
+@settings(max_examples=8, deadline=None)
+@given(
+    family=st.sampled_from(sorted(FAMILIES)),
+    backend=st.sampled_from(BACKENDS),
+    failures=st.booleans(),
+)
+def test_power_iteration_matches_numpy_reference(family, backend, failures):
+    g = FAMILIES[family](16, 1)
+    pi_r, ps_r = 25, 35
+    fm = FailureModel(link_p=0.7) if failures else FailureModel()
+    plan = compile_plan(g, backend, failures=fm)
+    key = jax.random.PRNGKey(11) if failures else None
+    est = gsp.power_iteration_norm(plan, pi_r, ps_r, key)
+    mats = _send_matrices(plan, key, pi_r + ps_r) if failures else None
+    ref = G.power_iteration_norm_reference(g, pi_r, ps_r, send_matrices=mats)
+    assert np.abs(np.asarray(est["vnorm"]) - ref["vnorm"]).max() < 1e-3, (family, backend)
+    assert np.abs(np.asarray(est["n_hat"]) - ref["n_hat"]).max() / g.n < 1e-3
+
+
+@pytest.mark.parametrize("family", ["kreg", "ba", "heavy_tail", "ring", "star"])
+def test_power_iteration_converges_to_exact_vnorm(family):
+    """Enough budget → every node's ‖v̂‖ within 5% of the spectral truth."""
+    g = FAMILIES[family](16, 2)
+    est = gsp.power_iteration_norm(compile_plan(g, "sparse"), 80, 160)
+    exact = M.v_steady_norm(g)
+    assert np.abs(np.asarray(est["vnorm"]) - exact).max() / exact < 5e-2, family
+    # n̂ tolerance keyed to the slowest family's 160-round contraction
+    assert np.abs(np.asarray(est["n_hat"]) - g.n).max() / g.n < 1e-2
+
+
+# ------------------------------------------------------- gains: host ≡ device
+def test_device_gains_match_host_gain_from_estimates():
+    """Acceptance: per-node gains from the on-device engine reproduce the
+    host ``gain_from_estimates`` to fp32 tolerance given identical estimates,
+    on every knowledge pathway."""
+    g = T.barabasi_albert(24, 3, seed=0)
+    plan = compile_plan(g, "sparse")
+    ests = gsp.estimate_all(plan, pi_rounds=40, ps_rounds=60)
+    n_hat = np.asarray(ests.n_hat, np.float64)
+
+    # α pathway (homogeneous default and explicit exponent)
+    for alpha in (None, 0.3):
+        host = gain_from_estimates(n_hat, family_exponent=alpha)
+        dev = np.asarray(gsp.gains_from_estimates(ests.n_hat, family_exponent=alpha))
+        assert np.abs(host - dev).max() / np.abs(host).max() < 1e-5
+
+    # degree-sample pathway (per-node walker polls)
+    sample = gsp.poll_degrees_device(
+        g, np.arange(g.n), walk_length=10, n_walks=32, key=jax.random.PRNGKey(2)
+    )
+    host = gain_from_estimates(n_hat, degree_sample=np.asarray(sample, np.float64))
+    dev = np.asarray(gsp.gain_from_degree_sample(ests.n_hat, sample))
+    assert np.abs(host - dev).max() / np.abs(host).max() < 1e-5
+
+    # direct ‖v̂‖ pathway vs the exact host gain
+    dev = np.asarray(gsp.gains_from_estimates(ests.n_hat, vnorm=ests.vnorm))
+    assert np.abs(dev - 1.0 / M.v_steady_norm(g)).max() < 5e-2 * dev.max()
+
+
+def test_gains_from_estimates_rejects_both_sources():
+    with pytest.raises(ValueError):
+        gsp.gains_from_estimates(jnp.ones(4), vnorm=jnp.ones(4), family_exponent=0.5)
+    with pytest.raises(ValueError):
+        gsp.make_gain_estimator(
+            T.ring(8), pi_rounds=2, ps_rounds=2, mode="vnorm", family_exponent=0.5
+        )
+
+
+def test_under_budget_nodes_fall_back_to_unit_gain():
+    """A budget below a node's leader distance leaves it with no size
+    estimate; the gain builders must hand it gain = 1.0 (unscaled He), not
+    the astronomically wrong inverse of the underflow clamp."""
+    g = T.ring(64)  # leader mass reaches ≤ budget hops per side
+    plan = compile_plan(g, "dense")
+    for mode in ("vnorm", "alpha"):
+        gains = np.asarray(
+            jax.jit(gsp.make_gain_estimator(plan, pi_rounds=8, ps_rounds=8, mode=mode))(
+                jax.random.PRNGKey(0)
+            )
+        )
+        assert np.isfinite(gains).all()
+        assert gains.max() < 100.0, mode  # no 1/EPS blow-ups
+        far = gains[24:40]  # nodes ≥ 9 hops from leader 0
+        np.testing.assert_array_equal(far, 1.0)
+    est = gsp.power_iteration_norm(plan, 8, 8)
+    reached = np.asarray(est["reached"])
+    assert reached[:8].all() and not reached[24:40].any()
+    # numpy reference agrees on who was reached
+    ref = G.power_iteration_norm_reference(g, 8, 8)
+    np.testing.assert_array_equal(reached, ref["reached"])
+
+
+# --------------------------------------------------------------- walker
+def test_device_walker_bias_correction():
+    g = T.configuration_heavy_tail(256, 2.2, seed=3)
+    raw = gsp.poll_degrees_device(
+        g, 0, walk_length=15, n_walks=600, key=jax.random.PRNGKey(0), correct_bias=False
+    )
+    fixed = gsp.poll_degrees_device(
+        g, 0, walk_length=15, n_walks=600, key=jax.random.PRNGKey(0)
+    )
+    true_mean = g.degrees.mean()
+    assert float(raw.mean()) > true_mean  # hub bias
+    assert abs(float(fixed.mean()) - true_mean) < abs(float(raw.mean()) - true_mean)
+
+
+def test_walker_degree_zero_guards():
+    """Satellite regression: walkers on a neighbourless node must stay put,
+    not read the next node's CSR segment; stuck *starts* raise."""
+    a = np.zeros((4, 4), np.float32)
+    a[0, 1] = a[1, 0] = 1.0  # node 2 receives from nobody; node 3 closes CSR
+    a[0, 2] = 1.0  # 0 receives from 2 → walks from 0 can land on 2 and stick
+    a[3, 0] = a[0, 3] = 0.0
+    a[3, 1] = 1.0
+    g = T.from_adjacency(a, directed=True)
+    with pytest.raises(ValueError):
+        G.poll_degrees(g, start=2, walk_length=3, n_walks=5)
+    with pytest.raises(ValueError):
+        gsp.poll_degrees_device(
+            g, 2, walk_length=3, n_walks=5, key=jax.random.PRNGKey(0)
+        )
+    # walks from 0 traverse the sink without indexing out of its segment
+    ks = G.poll_degrees(g, start=0, walk_length=6, n_walks=64, correct_bias=False)
+    assert ks.shape == (64,)
+    ks_d = gsp.poll_degrees_device(
+        g, 0, walk_length=6, n_walks=64, key=jax.random.PRNGKey(1), correct_bias=False
+    )
+    assert ks_d.shape == (64,)
+    # …and sink-trapped walkers are excluded from the 1/k resample instead
+    # of poisoning it (host: NaN probabilities; device: all-zero samples)
+    for sample in (
+        G.poll_degrees(g, start=0, walk_length=6, n_walks=64),
+        np.asarray(gsp.poll_degrees_device(
+            g, 0, walk_length=6, n_walks=64, key=jax.random.PRNGKey(1)
+        )),
+    ):
+        assert np.isfinite(sample).all() and (sample > 0).all()
+
+
+def test_walker_rides_training_failure_draws():
+    """Satellite contract: with a failure-model plan, the degree poll's
+    transitions draw the same per-edge Bernoullis as training rounds — and
+    still produce a valid, finite sample."""
+    g = T.configuration_heavy_tail(128, 2.2, seed=1)
+    plan = compile_plan(g, "sparse", failures=FailureModel(link_p=0.5, node_p=0.9))
+    ks = np.asarray(gsp.poll_degrees_device(
+        g, 0, walk_length=20, n_walks=400, key=jax.random.PRNGKey(4), plan=plan
+    ))
+    assert np.isfinite(ks).all() and (ks > 0).all()
+    true_mean = g.degrees.mean()
+    # failures slow exploration but the corrected sample stays in the right
+    # ballpark (statistical, generous bound)
+    assert abs(ks.mean() - true_mean) / true_mean < 0.5
+    # inactive plan → bit-identical to the plain walk (no extra key splits)
+    plan_ok = compile_plan(g, "sparse")
+    a = gsp.poll_degrees_device(g, 0, walk_length=8, n_walks=32, key=jax.random.PRNGKey(5))
+    b = gsp.poll_degrees_device(
+        g, 0, walk_length=8, n_walks=32, key=jax.random.PRNGKey(5), plan=plan_ok
+    )
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------- convergence vs spectral gap
+def test_convergence_rate_tracks_spectral_gap():
+    """The fitted per-round contraction of the size estimator must track
+    |λ₂| = 1 − gap, and better-connected graphs must converge faster."""
+    kreg = T.random_k_regular(32, 4, seed=0)
+    rep = gsp.convergence_report(compile_plan(kreg, "dense"), 80)
+    lam2 = rep["predicted_rate"]
+    assert lam2**1.4 < rep["fitted_rate"] < lam2**0.6
+    assert 0 < rep["rounds_to_1pct"] < 80
+
+    ring = gsp.convergence_report(compile_plan(T.ring(32), "dense"), 80)
+    comp = gsp.convergence_report(compile_plan(T.complete(32), "dense"), 80)
+    # complete mixes in one round (λ₂ = 0: error lands on the fp32 noise
+    # floor immediately, so compare budgets, not fitted rates)
+    assert rep["fitted_rate"] < ring["fitted_rate"]
+    assert comp["rounds_to_1pct"] < rep["rounds_to_1pct"]
+    # per-node errors shrink monotonically-ish: late max error ≪ early
+    assert rep["max_rel_err"][-1] < 1e-2 * rep["max_rel_err"][5]
+
+
+# ------------------------------------------------------ fused warmup parity
+@pytest.mark.slow
+def test_fused_warmup_matches_manual_decomposition():
+    """Acceptance: estimate→init→train as one program ≡ running the three
+    phases by hand with the same key split (params to fp32 tolerance, gains
+    bit-equal) — and the realised gains match the host gain computation."""
+    from repro.core.initialisation import InitConfig
+    from repro.data import batch_index_schedule, mnist_like, node_datasets
+    from repro.fed import (
+        init_fl_state,
+        make_eval_fn,
+        make_round_fn,
+        run_trajectory,
+        run_warmup_trajectory,
+    )
+    from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
+    from repro.optim import sgd
+
+    N, PER, BS, BL, R = 8, 48, 8, 2, 6
+    g = T.random_k_regular(N, 4, seed=0)
+    ds = mnist_like(N * PER + 64, seed=0)
+    xs, ys = node_datasets(ds, [np.arange(i * PER, (i + 1) * PER) for i in range(N)])
+    test = (ds.x[-64:], ds.y[-64:])
+    loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
+    opt = sgd(1e-3, 0.5)
+    icfg = InitConfig("he_normal", 1.0)
+    init_one_g = lambda k, gn: init_mlp(icfg.replace(gain=gn), k, hidden=(32,))
+    rf = make_round_fn(loss_fn, opt, g, link_p=0.8)
+    sched = batch_index_schedule(PER, N, BS, R * BL, seed=0)
+    est_fn = gsp.make_gain_estimator(
+        compile_plan(g, "sparse", failures=FailureModel(link_p=0.8)),
+        pi_rounds=30, ps_rounds=50,
+    )
+    key = jax.random.PRNGKey(5)
+    common = dict(n_rounds=R, eval_every=3, eval_fn=make_eval_fn(loss_fn),
+                  eval_batch=test, b_local=BL)
+
+    st, hist, gains = run_warmup_trajectory(
+        key, rf, xs, ys, sched, n_nodes=N, init_one=init_one_g, optimizer=opt,
+        estimate_gains=est_fn, **common,
+    )
+    k_est, k_init = jax.random.split(key)
+    gains2 = jax.jit(est_fn)(k_est)
+    st2 = init_fl_state(k_init, N, init_one_g, opt, gains=gains2)
+    st2, hist2 = run_trajectory(st2, rf, xs, ys, sched, **common)
+
+    np.testing.assert_array_equal(gains, np.asarray(gains2))
+    for a, b in zip(jax.tree_util.tree_leaves(st.params), jax.tree_util.tree_leaves(st2.params)):
+        assert float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()) < 1e-6
+    np.testing.assert_allclose(hist["train_loss"], hist2["train_loss"], rtol=1e-6)
+    # the estimates behind the gains reproduce the host gain path (fp32)
+    host_gains = 1.0 / np.asarray(
+        G.power_iteration_norm_reference(
+            g, 30, 50,
+            send_matrices=_send_matrices(
+                compile_plan(g, "dense", failures=FailureModel(link_p=0.8)),
+                jax.random.split(k_est)[0], 80,
+            ),
+        )["vnorm"]
+    )
+    np.testing.assert_allclose(gains, host_gains, rtol=1e-4)
+
+
+def test_init_fl_state_per_node_gains_scale_draws():
+    """gains=(n,) must reach each node's initialiser: std of node i's weights
+    scales with gains[i]; gains=None keeps the legacy contract."""
+    from repro.core.initialisation import InitConfig
+    from repro.fed import init_fl_state
+    from repro.models.paper_models import init_mlp
+    from repro.optim import sgd
+
+    icfg = InitConfig("he_normal", 1.0)
+    init_g = lambda k, gn: init_mlp(icfg.replace(gain=gn), k, in_dim=64, hidden=(64,), n_classes=4)
+    gains = jnp.asarray([1.0, 2.0, 4.0, 8.0])
+    st = init_fl_state(jax.random.PRNGKey(0), 4, init_g, sgd(1e-2, 0.0), gains=gains)
+    w = st.params["fc0"]["w"]  # (4, 64, 64)
+    stds = np.asarray(jnp.std(w.reshape(4, -1), axis=1))
+    np.testing.assert_allclose(stds / stds[0], [1.0, 2.0, 4.0, 8.0], rtol=0.05)
+    st_legacy = init_fl_state(
+        jax.random.PRNGKey(0), 4, lambda k: init_mlp(icfg, k, in_dim=64, hidden=(64,), n_classes=4),
+        sgd(1e-2, 0.0),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(st_legacy.params["fc0"]["w"]),
+        np.asarray(init_fl_state(jax.random.PRNGKey(0), 4, init_g, sgd(1e-2, 0.0),
+                                 gains=jnp.ones(4)).params["fc0"]["w"]),
+    )

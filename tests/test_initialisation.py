@@ -45,6 +45,47 @@ def test_gain_from_estimates_fallbacks():
     assert np.isclose(est, 8.0, rtol=1e-6)
 
 
+def test_gain_from_estimates_rejects_contradictory_knowledge():
+    """Satellite regression: family_exponent used to be silently ignored
+    when a degree_sample was given — now the combination raises."""
+    g = T.random_k_regular(64, 8, seed=0)
+    with pytest.raises(ValueError, match="not both"):
+        I.gain_from_estimates(64, degree_sample=g.degrees, family_exponent=0.25)
+
+
+def test_gain_from_estimates_vectorises_per_node():
+    """(n,) per-node estimates → (n,) gains, elementwise equal to scalar calls."""
+    n_est = np.array([20.0, 64.0, 100.3])
+    vec = I.gain_from_estimates(n_est)
+    assert vec.shape == (3,)
+    for i, ne in enumerate(n_est):
+        assert np.isclose(vec[i], I.gain_from_estimates(float(ne)))
+    vec_a = I.gain_from_estimates(n_est, family_exponent=0.25)
+    np.testing.assert_allclose(vec_a, n_est**0.25)
+    # per-node degree samples: (n, m) rows against (n,) size estimates
+    g = T.random_k_regular(64, 8, seed=0)
+    sample = np.stack([g.degrees, g.degrees])
+    vec_d = I.gain_from_estimates(np.array([64.0, 64.2]), degree_sample=sample)
+    assert vec_d.shape == (2,)
+    for v in vec_d:
+        assert np.isclose(v, I.gain_from_estimates(64, degree_sample=g.degrees), rtol=1e-6)
+
+
+def test_per_node_gain_traces_through_scaled_init():
+    """InitConfig.gain may be a traced scalar: vmapping over (key, gain)
+    gives each lane its own σ scale."""
+    import jax.numpy as jnp
+
+    def one(k, g):
+        return I.scaled_init(I.InitConfig("he_normal", g), k, (256, 256))
+
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    gains = jnp.asarray([1.0, 3.0, 9.0])
+    ws = jax.vmap(one)(keys, gains)
+    stds = np.asarray(jnp.std(ws.reshape(3, -1), axis=1))
+    np.testing.assert_allclose(stds / stds[0], [1.0, 3.0, 9.0], rtol=0.1)
+
+
 def test_misestimated_n_degrades_gracefully():
     """Paper Fig. 4(a): 2x over/under-estimation changes gain only by √2."""
     g = T.random_k_regular(64, 8, seed=0)

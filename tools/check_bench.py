@@ -16,6 +16,10 @@ import sys
 SCHEMAS = {
     "BENCH_mixing.json": (["records"], ["family", "n", "d", "us_dense"]),
     "BENCH_rounds.json": (["records"], ["config", "n_nodes", "rounds", "sec_executor"]),
+    "BENCH_estimates.json": (
+        ["records", "rounds_block"],
+        ["family", "n", "us_dense", "us_sparse", "sparse_speedup_vs_dense"],
+    ),
 }
 DEFAULT_SCHEMA = (["records"], [])
 
