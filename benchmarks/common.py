@@ -54,6 +54,7 @@ def run_dfl_mlp(
     *,
     n_nodes: int,
     graph=None,
+    plan=None,
     gain: float | None = None,
     rounds: int = 60,
     per_node: int = 128,
@@ -74,14 +75,19 @@ def run_dfl_mlp(
 
     Runs through the fused round executor by default; ``executor=False``
     takes the legacy per-round ``train_loop`` (the BENCH_rounds baseline).
-    Returns (history, seconds_per_round).
+    ``plan`` overrides the mixing operator (a compiled ``CommPlan`` or a
+    time-varying ``PlanSchedule``) while ``graph`` keeps describing the
+    dataset/gain anchor.  Returns (history, seconds_per_round).
     """
     graph, xs, ys, test, loss_fn, opt, eval_fn, init_one = _mlp_setup(
         n_nodes, graph, per_node, hidden, optimizer, seed, test_size
     )
     gain = gain if gain is not None else gain_from_graph(graph)
     state = init_fl_state(jax.random.PRNGKey(seed), n_nodes, init_one(gain), opt)
-    rf = make_round_fn(loss_fn, opt, graph, link_p=link_p, node_p=node_p, aggregate=aggregate)
+    rf = make_round_fn(
+        loss_fn, opt, plan if plan is not None else graph,
+        link_p=link_p, node_p=node_p, aggregate=aggregate,
+    )
 
     t0 = time.time()
     if executor:
@@ -161,6 +167,7 @@ def run_dfl_mlp_uncoordinated(
     n_nodes: int,
     est_rounds: int,
     graph=None,
+    plan=None,
     rounds: int = 60,
     per_node: int = 128,
     batch_size: int = 16,
@@ -168,6 +175,7 @@ def run_dfl_mlp_uncoordinated(
     hidden=(128, 64),
     optimizer="sgd",
     mode: str = "vnorm",
+    leaderless: bool = False,
     eval_every: int = 5,
     seed: int = 0,
     test_size: int = 512,
@@ -176,6 +184,8 @@ def run_dfl_mlp_uncoordinated(
     gossip engine with a budget of ``est_rounds`` rounds each for the
     power-iteration and push-sum phases, fused into the training program via
     ``run_warmup_trajectory`` (estimate → per-node init → train, one jit).
+    ``plan`` (a ``CommPlan`` or time-varying ``PlanSchedule``) overrides the
+    operator both phases ride — fig8's churned end-to-end path.
 
     Returns (history, seconds_per_round, gains) — ``gains`` is the realised
     (n,) per-node vector, so callers can report estimation noise.
@@ -188,10 +198,12 @@ def run_dfl_mlp_uncoordinated(
         n_nodes, graph, per_node, hidden, optimizer, seed, test_size
     )
     init_one_g = lambda k, gn: init_one(gn)(k)
+    mix_plan = plan if plan is not None else graph
     estimate_fn = make_gain_estimator(
-        compile_plan(graph), pi_rounds=est_rounds, ps_rounds=est_rounds, mode=mode
+        plan if plan is not None else compile_plan(graph),
+        pi_rounds=est_rounds, ps_rounds=est_rounds, mode=mode, leaderless=leaderless,
     )
-    rf = make_round_fn(loss_fn, opt, graph)
+    rf = make_round_fn(loss_fn, opt, mix_plan)
     sched = batch_index_schedule(per_node, n_nodes, batch_size, rounds * b_local, seed=seed)
     t0 = time.time()
     state, hist, gains = run_warmup_trajectory(
@@ -202,6 +214,68 @@ def run_dfl_mlp_uncoordinated(
     )
     sec_per_round = (time.time() - t0) / rounds
     return hist, sec_per_round, gains
+
+
+def run_dfl_mlp_uncoordinated_sweep(
+    *,
+    n_nodes: int,
+    budgets,
+    seeds=(0,),
+    graph=None,
+    plan=None,
+    rounds: int = 60,
+    per_node: int = 128,
+    batch_size: int = 16,
+    b_local: int = 2,
+    hidden=(128, 64),
+    optimizer="sgd",
+    mode: str = "vnorm",
+    leaderless: bool = False,
+    eval_every: int = 5,
+    data_seed: int = 0,
+    test_size: int = 512,
+):
+    """The (gossip budget × seed) grid of uncoordinated runs as ONE vmapped
+    program (fig4's primary sweep): a single gain estimator is built at the
+    max budget and each run masks its tail rounds, so every (budget, seed)
+    cell shares one program shape (``fed.executor.run_warmup_sweep``).
+
+    Returns (grid, seconds_per_run) where ``grid[i][j]`` is
+    ``(history, gains)`` for budgets[i] × seeds[j].
+    """
+    from repro.core.commplan import compile_plan
+    from repro.fed import run_warmup_sweep
+    from repro.gossip import make_gain_estimator
+
+    graph, xs, ys, test, loss_fn, opt, eval_fn, init_one = _mlp_setup(
+        n_nodes, graph, per_node, hidden, optimizer, data_seed, test_size
+    )
+    init_one_g = lambda k, gn: init_one(gn)(k)
+    max_b = int(max(budgets))
+    estimate_fn = make_gain_estimator(
+        plan if plan is not None else compile_plan(graph),
+        pi_rounds=max_b, ps_rounds=max_b, mode=mode, leaderless=leaderless,
+    )
+    rf = make_round_fn(loss_fn, opt, plan if plan is not None else graph)
+    sched = batch_index_schedule(per_node, n_nodes, batch_size, rounds * b_local, seed=data_seed)
+    keys = [jax.random.PRNGKey(s) for _b in budgets for s in seeds]
+    buds = [b for b in budgets for _s in seeds]
+    t0 = time.time()
+    _, hists, gains = run_warmup_sweep(
+        keys, rf, xs, ys, sched, n_nodes=n_nodes, init_one=init_one_g,
+        optimizer=opt, estimate_gains=estimate_fn, budgets=buds,
+        n_rounds=rounds, eval_every=eval_every, eval_fn=eval_fn, eval_batch=test,
+        b_local=b_local,
+    )
+    sec_per_run = (time.time() - t0) / len(keys)
+    grid = [
+        [
+            (hists[i * len(seeds) + j], gains[i * len(seeds) + j])
+            for j in range(len(seeds))
+        ]
+        for i in range(len(budgets))
+    ]
+    return grid, sec_per_run
 
 
 def rounds_to_loss(hist: dict, threshold: float) -> float:

@@ -8,7 +8,9 @@ Two renderings of mis-estimation:
   over a random 4-regular graph, and its *own* noisy ``‖v̂_steady‖⁻¹``
   feeds the fused estimate→init→train warmup trajectory.  Small budgets →
   genuinely per-node, genuinely wrong gains; the claim is that training
-  still beats the unscaled He baseline by a wide margin.
+  still beats the unscaled He baseline by a wide margin.  The whole budget
+  grid compiles to ONE vmapped program (``fed.executor.run_warmup_sweep``):
+  a single estimator built at the max budget masks each run's tail rounds.
 * **hand-fabricated reference (``fig4.ref.*``)** — the original controlled
   n × factor / exponent distortions of a single global gain, kept as the
   labelled reference curve the gossip sweep is read against.
@@ -18,7 +20,7 @@ from __future__ import annotations
 from repro.core import topology as T
 from repro.core.initialisation import gain_from_estimates
 
-from .common import emit, run_dfl_mlp, run_dfl_mlp_uncoordinated
+from .common import emit, run_dfl_mlp, run_dfl_mlp_uncoordinated_sweep
 
 
 def run(quick: bool = True) -> None:
@@ -35,17 +37,19 @@ def run(quick: bool = True) -> None:
     hist_he, spr = run_dfl_mlp(n_nodes=n, graph=g, gain=1.0, rounds=rounds)
     emit("fig4.he_baseline", spr * 1e6, f"final={hist_he['test_loss'][-1]:.3f}")
 
-    # primary: estimation budget → per-node noisy gains → fused warmup run
-    # (budgets start at the graph diameter: below it some nodes have not yet
-    # heard from the leader and no size estimate exists at all)
+    # primary: estimation budget → per-node noisy gains → fused warmup runs,
+    # the whole budget grid as one vmapped program (budgets start at the
+    # graph diameter: below it some nodes have not yet heard from the leader
+    # and no size estimate exists at all)
     budgets = (4, 8, 16) if quick else (4, 8, 16, 32, 64)
-    for budget in budgets:
-        hist, spr, gains = run_dfl_mlp_uncoordinated(
-            n_nodes=n, graph=g, est_rounds=budget, rounds=rounds
-        )
+    grid, spr = run_dfl_mlp_uncoordinated_sweep(
+        n_nodes=n, graph=g, budgets=budgets, rounds=rounds
+    )
+    for budget, row in zip(budgets, grid):
+        hist, gains = row[0]
         emit(
             f"fig4.gossip_budget{budget}",
-            spr * 1e6,
+            spr / rounds * 1e6,  # per-round µs, same unit as every other row
             f"gain_mean={gains.mean():.2f};gain_spread={gains.max() - gains.min():.3f};"
             f"final={hist['test_loss'][-1]:.3f}",
         )

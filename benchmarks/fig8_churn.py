@@ -1,0 +1,145 @@
+"""Figure 8: DFL under topology churn — the PlanSchedule end-to-end story.
+
+Real deployments have link churn and mobility; the paper's analysis assumes
+a static graph.  This benchmark (DESIGN.md §13) measures what the
+``PlanSchedule`` machinery costs and what churn does to the paper's claims:
+
+* **churn sweep** (family × churn rate): a Markov chain of edge up/down
+  rewired snapshots (``topology.churn_sequence``) compiled into one
+  ``PlanSchedule`` and driven END-TO-END — leaderless gossip estimation →
+  per-node gains → init → training — inside ONE jitted scan, with the
+  operator switching by round index every ``PERIOD`` rounds.  The static
+  (churn-free) run of the same family anchors the comparison.
+* **envelope row**: per-round executor cost of a K=8 schedule vs the static
+  plan at n=256 on the sparse backend — the gather-over-stacked-buffers
+  overhead the schedule adds to the round body.  Acceptance: ≤ 1.3×.
+
+Schema (``BENCH_churn.json``): ``{device, cpu_count, quick, records: [
+{family, n, k_plans, churn_rate, rounds, sec_per_round_static,
+sec_per_round_schedule, overhead_vs_static, ...}]}`` — validated by
+``tools/check_bench.py`` in CI.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+
+from repro.core import topology as T
+from repro.core.commplan import compile_schedule, cyclic_map
+
+from .common import emit, run_dfl_mlp, run_dfl_mlp_uncoordinated
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_churn.json"
+
+FAMILIES = {
+    "kreg": lambda n, seed: T.random_k_regular(n, 8, seed=seed),
+    "ba": lambda n, seed: T.barabasi_albert(n, 4, seed=seed),
+}
+
+PERIOD = 2  # rounds each snapshot stays active
+
+
+def _schedule(base, k_plans, rate, backend="sparse"):
+    graphs = T.churn_sequence(base, k_plans, rate, seed=1)
+    return compile_schedule(graphs, backend=backend, round_map=cyclic_map(PERIOD))
+
+
+def run(quick: bool = True) -> None:
+    n = 32 if quick else 64
+    rounds = 40 if quick else 150
+    k_plans = 4 if quick else 8
+    est_rounds = 16 if quick else 32
+    records = []
+
+    for family, build in FAMILIES.items():
+        base = build(n, 0)
+        # static anchor: same family, same fused warmup path, K = 1
+        hist_st, spr_st, gains_st = run_dfl_mlp_uncoordinated(
+            n_nodes=n, graph=base, plan=_schedule(base, 1, 0.0),
+            est_rounds=est_rounds, rounds=rounds, leaderless=True,
+        )
+        for rate in (0.05, 0.2):
+            sched = _schedule(base, k_plans, rate)
+            hist, spr, gains = run_dfl_mlp_uncoordinated(
+                n_nodes=n, graph=base, plan=sched,
+                est_rounds=est_rounds, rounds=rounds, leaderless=True,
+            )
+            rec = {
+                "family": family,
+                "n": n,
+                "k_plans": k_plans,
+                "churn_rate": rate,
+                "rounds": rounds,
+                "sec_per_round_static": spr_st,
+                "sec_per_round_schedule": spr,
+                "overhead_vs_static": spr / spr_st,
+                "final_test_loss_static": hist_st["test_loss"][-1],
+                "final_test_loss_schedule": hist["test_loss"][-1],
+                "gain_mean": float(gains.mean()),
+                "gain_spread": float(gains.max() - gains.min()),
+            }
+            records.append(rec)
+            emit(
+                f"fig8.{family}.churn{rate:g}",
+                spr * 1e6,
+                f"final={rec['final_test_loss_schedule']:.3f};"
+                f"static={rec['final_test_loss_static']:.3f};"
+                f"overhead={rec['overhead_vs_static']:.2f}x;"
+                f"gain_mean={rec['gain_mean']:.2f}",
+            )
+
+    # ---- envelope row: schedule-machinery cost at scale (acceptance) ------
+    n_big = 128 if quick else 256
+    big_rounds = 20 if quick else 40
+    base = T.random_k_regular(n_big, 8, seed=0)
+    sched = _schedule(base, 8, 0.1)
+
+    def timed(plan):
+        best = float("inf")
+        for _ in range(2):
+            _, spr = run_dfl_mlp(
+                n_nodes=n_big, graph=base, plan=plan, rounds=big_rounds,
+                eval_every=0, per_node=64,
+            )
+            best = min(best, spr)
+        return best
+
+    spr_st = timed(None)  # graph → auto backend = sparse at this n
+    spr_sc = timed(sched)
+    rec = {
+        "family": "kreg",
+        "n": n_big,
+        "k_plans": 8,
+        "churn_rate": 0.1,
+        "rounds": big_rounds,
+        "sec_per_round_static": spr_st,
+        "sec_per_round_schedule": spr_sc,
+        "overhead_vs_static": spr_sc / spr_st,
+        "config": "envelope_sparse",
+    }
+    records.append(rec)
+    emit(
+        f"fig8.envelope_n{n_big}_k8",
+        spr_sc * 1e6,
+        f"overhead={rec['overhead_vs_static']:.2f}x;"
+        f"static_us={spr_st * 1e6:.0f};schedule_us={spr_sc * 1e6:.0f}",
+    )
+
+    OUT.write_text(
+        json.dumps(
+            {
+                "device": str(jax.devices()[0]),
+                "cpu_count": __import__("os").cpu_count(),
+                "quick": quick,
+                "records": records,
+            },
+            indent=2,
+        )
+    )
+    print(f"# wrote {OUT}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

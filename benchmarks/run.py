@@ -23,6 +23,7 @@ from . import (
     fig5_vsteady,
     fig6_env,
     fig7_constant_data,
+    fig8_churn,
     kernels_bench,
     roofline_report,
     rounds_bench,
@@ -37,6 +38,7 @@ MODULES = {
     "fig5": fig5_vsteady,
     "fig6": fig6_env,
     "fig7": fig7_constant_data,
+    "fig8": fig8_churn,
     "kernels": kernels_bench,
     "roofline": roofline_report,
     "rounds": rounds_bench,

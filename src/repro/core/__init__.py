@@ -1,7 +1,17 @@
 """Core contribution of the paper: network-aware uncoordinated initialisation
 and DecAvg aggregation for decentralised federated learning."""
 from . import commplan, decavg, diffusion, gossip, initialisation, mixing, topology
-from .commplan import BACKENDS, CommPlan, FailureModel, compile_plan
+from .commplan import (
+    BACKENDS,
+    CommPlan,
+    FailureModel,
+    PlanSchedule,
+    RoundMap,
+    compile_plan,
+    compile_schedule,
+    cyclic_map,
+    sequence_map,
+)
 from .decavg import (
     failure_receive_matrix,
     link_failure_mask,
@@ -30,4 +40,4 @@ from .mixing import (
     v_steady_norm_closed_form,
     v_steady_norm_from_degree_sample,
 )
-from .topology import Graph
+from .topology import Graph, churn_sequence

@@ -40,9 +40,39 @@ from .topology import Graph
 
 PyTree = Any
 
-__all__ = ["BACKENDS", "CommPlan", "FailureModel", "compile_plan"]
+__all__ = [
+    "BACKENDS",
+    "CommPlan",
+    "FailureModel",
+    "PlanSchedule",
+    "RoundMap",
+    "compile_plan",
+    "compile_schedule",
+    "cyclic_map",
+    "sequence_map",
+]
 
 BACKENDS = ("dense", "sparse", "ppermute")
+
+
+def _draw_failure_masks(
+    failures: "FailureModel", n_edges: int, n: int, key: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """(edge_keep (n_edges,), node_active (n,)) — the uniform failure draw.
+
+    Shared by ``CommPlan`` (width = the plan's own edge count) and
+    ``PlanSchedule`` (width = the schedule's shared edge *envelope*, so the
+    draw shape is static while the active plan varies by round)."""
+    k_link, k_node = jax.random.split(key)
+    if failures.link_p < 1.0:
+        edge_keep = jax.random.uniform(k_link, (max(n_edges, 1),)) < failures.link_p
+    else:
+        edge_keep = jnp.ones((max(n_edges, 1),), dtype=bool)
+    if failures.node_p < 1.0:
+        active = jax.random.bernoulli(k_node, failures.node_p, (n,))
+    else:
+        active = jnp.ones((n,), dtype=bool)
+    return edge_keep, active
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,6 +208,55 @@ class CommPlan:
             out = self_w[:, None] * x + recv.sum(axis=0)
         return out[:, 0] if squeeze else out
 
+    def spread_min(self, values: jax.Array, key: jax.Array | None = None) -> jax.Array:
+        """One round of neighbourhood **min**-exchange over the live links.
+
+        ``out[i] = min(values[i], min over i's surviving neighbourhood)`` —
+        the transport the leaderless exponential-random-minimum size sketches
+        ride (``repro.gossip.estimate_size_leaderless``): extrema propagate
+        through exactly the per-edge/per-node failure draws that ``mix`` /
+        ``spread`` consume for the same ``key``, so sketch traffic shares
+        training's links round for round.  Receive orientation (row i's
+        neighbours); for the undirected graphs the init math assumes this is
+        symmetric.
+
+        ``values``: (n,) or (n, k) float payload.  Returns the same shape.
+        """
+        if self.failures.active and key is None:
+            raise ValueError("failure model active: spread_min() needs a PRNG key")
+        x = jnp.asarray(values, jnp.float32)
+        squeeze = x.ndim == 1
+        if squeeze:
+            x = x[:, None]
+        inf = jnp.float32(jnp.inf)
+        if self.failures.active:
+            edge_keep, active = self._edge_node_masks(key)
+        if self.backend == "dense":
+            keep = self.adjacency > 0
+            if self.failures.active:
+                keep = keep & edge_keep[self.edge_uid_matrix]
+                keep = keep & active[:, None] & active[None, :]
+            nbr = jnp.where(keep[:, :, None], x[None, :, :], inf).min(axis=1)
+        elif self.backend == "sparse":
+            if self.failures.active:
+                keep = edge_keep[self.edge_uid] & active[self.src] & active[self.dst]
+                gathered = jnp.where(keep[:, None], x[self.src], inf)
+            else:
+                gathered = x[self.src]
+            nbr = jax.ops.segment_min(
+                gathered, self.dst, num_segments=self.n, indices_are_sorted=True
+            )
+        else:
+            partners = jnp.asarray(self.partners)
+            keep = self.color_edge_uid >= 0
+            if self.failures.active:
+                keep = keep & edge_keep[jnp.clip(self.color_edge_uid, 0, None)]
+                keep = keep & active[None, :] & jnp.take(active, partners)
+            cand = x[partners]  # (n_colors, n, k)
+            nbr = jnp.where(keep[:, :, None], cand, inf).min(axis=0)
+        out = jnp.minimum(x, nbr)
+        return out[:, 0] if squeeze else out
+
     # ----------------------------------------------------- per-round weights
     def round_masks(self, key: jax.Array) -> tuple[jax.Array, jax.Array]:
         """Public alias of the per-round failure draws, for host-side
@@ -187,19 +266,7 @@ class CommPlan:
 
     def _edge_node_masks(self, key: jax.Array) -> tuple[jax.Array, jax.Array]:
         """(edge_keep (n_edges,), node_active (n,)) — shared across backends."""
-        k_link, k_node = jax.random.split(key)
-        if self.failures.link_p < 1.0:
-            edge_keep = (
-                jax.random.uniform(k_link, (max(self.n_edges, 1),))
-                < self.failures.link_p
-            )
-        else:
-            edge_keep = jnp.ones((max(self.n_edges, 1),), dtype=bool)
-        if self.failures.node_p < 1.0:
-            active = jax.random.bernoulli(k_node, self.failures.node_p, (self.n,))
-        else:
-            active = jnp.ones((self.n,), dtype=bool)
-        return edge_keep, active
+        return _draw_failure_masks(self.failures, self.n_edges, self.n, key)
 
     def _dense_round_matrix(self, key: jax.Array | None) -> jax.Array:
         if not self.failures.active:
@@ -393,4 +460,368 @@ def compile_plan(
         color_raw_w=jnp.asarray(raw, jnp.float32),
         self_w=jnp.asarray(s / den, jnp.float32),
         raw_self_w=jnp.asarray(s, jnp.float32),
+    )
+
+
+# =========================================================================
+# PlanSchedule: time-varying topologies as a first-class axis (DESIGN.md §13)
+# =========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundMap:
+    """round index → plan index assignment for a ``PlanSchedule``.
+
+    ``cyclic``:   plan ``(r // period) % K`` — plans take turns, ``period``
+                  rounds each.
+    ``sequence``: plan ``sequence[r % len(sequence)]`` — an explicit
+                  (piecewise or seeded-random/Markov-realised) assignment,
+                  tiled past its horizon.
+    Both forms are jit-traceable in ``r`` (integer arithmetic / one gather),
+    which is what lets the executor switch operators *inside* its scan.
+    """
+
+    kind: str  # "cyclic" | "sequence"
+    period: int = 1
+    sequence: np.ndarray | None = None
+
+    def __post_init__(self):
+        if self.kind not in ("cyclic", "sequence"):
+            raise ValueError(f"unknown round-map kind {self.kind!r}")
+        if self.kind == "cyclic" and self.period < 1:
+            raise ValueError("cyclic round map needs period >= 1")
+        if self.kind == "sequence" and (self.sequence is None or len(self.sequence) == 0):
+            raise ValueError("sequence round map needs a non-empty index sequence")
+
+
+def cyclic_map(period: int = 1) -> RoundMap:
+    """Plans take turns, ``period`` consecutive rounds each."""
+    return RoundMap("cyclic", period=int(period))
+
+
+def sequence_map(sequence) -> RoundMap:
+    """Explicit per-round plan indices, tiled cyclically past the horizon."""
+    return RoundMap("sequence", sequence=np.asarray(sequence, np.int32))
+
+
+def _pad1(a: jax.Array, width: int, fill) -> jax.Array:
+    return jnp.pad(a, (0, width - a.shape[0]), constant_values=fill)
+
+
+def _stack_hyb(plans: Sequence[CommPlan], n: int) -> dict[str, jax.Array]:
+    """Pad the sparse plans' HYB (ELL slots + dense hub rows) layouts to one
+    envelope so the clean-path fast rendering survives scheduling.
+
+    Slot padding is identity-index / zero-weight.  Hub-row padding repeats a
+    plan's first hub (duplicate ``.set`` of the same value — harmless); a
+    hub-free plan fabricates node 0's dense receive row, so the overwritten
+    row carries exactly the operator value the ELL slots would produce.
+    """
+    s_env = max(p.slot_idx.shape[0] for p in plans)
+    h_env = max(p.hub_rows.shape[0] for p in plans)
+    idrow = jnp.arange(n, dtype=jnp.int32)[None, :]
+    slot_idx, slot_w, hub_rows, hub_m = [], [], [], []
+    for p in plans:
+        s = p.slot_idx.shape[0]
+        slot_idx.append(
+            jnp.concatenate([p.slot_idx, jnp.tile(idrow, (s_env - s, 1))])
+            if s_env > s
+            else p.slot_idx
+        )
+        slot_w.append(jnp.pad(p.slot_w, ((0, s_env - s), (0, 0))))
+        h = p.hub_rows.shape[0]
+        if h_env == 0:
+            hub_rows.append(p.hub_rows)
+            hub_m.append(p.hub_m)
+        elif h > 0:
+            hub_rows.append(jnp.concatenate([p.hub_rows, jnp.repeat(p.hub_rows[:1], h_env - h)]))
+            hub_m.append(jnp.concatenate([p.hub_m, jnp.repeat(p.hub_m[:1], h_env - h, axis=0)]))
+        else:
+            src, dst = np.asarray(p.src), np.asarray(p.dst)
+            row = np.zeros(n, np.float32)
+            sel = dst == 0
+            row[src[sel]] = np.asarray(p.edge_w)[sel]
+            row[0] = float(np.asarray(p.self_w)[0])
+            hub_rows.append(jnp.zeros((h_env,), jnp.int32))
+            hub_m.append(jnp.tile(jnp.asarray(row)[None, :], (h_env, 1)))
+    return dict(
+        slot_idx=jnp.stack(slot_idx),
+        slot_w=jnp.stack(slot_w),
+        hyb_self_w=jnp.stack([p.hyb_self_w for p in plans]),
+        hub_rows=jnp.stack(hub_rows),
+        hub_m=jnp.stack(hub_m),
+    )
+
+
+def _stack_plans(plans: Sequence[CommPlan]) -> dict[str, jax.Array]:
+    """Stack K same-backend plans into shared-shape device buffers.
+
+    The shared sparsity envelope: CSR edge arrays pad to the max nnz with
+    zero-weight (src = dst = n-1) entries — appended, so per-plan ``dst``
+    stays sorted and ``segment_sum(indices_are_sorted=True)`` stays valid —
+    and colour layouts pad to the max colour count with unmatched
+    (identity-partner, zero-weight, uid = -1) classes.  Padding carries
+    exactly-zero weights, so gathered plans execute the unpadded operator.
+    """
+    backend = plans[0].backend
+    st: dict[str, jax.Array] = {}
+    if backend == "dense":
+        for f in ("receive", "adjacency", "edge_uid_matrix"):
+            st[f] = jnp.stack([getattr(p, f) for p in plans])
+    elif backend == "sparse":
+        n = plans[0].n
+        nnz = max(p.src.shape[0] for p in plans)
+        st["src"] = jnp.stack([_pad1(p.src, nnz, n - 1) for p in plans])
+        st["dst"] = jnp.stack([_pad1(p.dst, nnz, n - 1) for p in plans])
+        st["edge_uid"] = jnp.stack([_pad1(p.edge_uid, nnz, 0) for p in plans])
+        st["edge_w"] = jnp.stack([_pad1(p.edge_w, nnz, 0.0) for p in plans])
+        st["raw_edge_w"] = jnp.stack([_pad1(p.raw_edge_w, nnz, 0.0) for p in plans])
+        st["self_w"] = jnp.stack([p.self_w for p in plans])
+        st["raw_self_w"] = jnp.stack([p.raw_self_w for p in plans])
+        st.update(_stack_hyb(plans, n))
+    else:  # ppermute
+        n = plans[0].n
+        nc = max(p.n_colors for p in plans)
+        idrow = np.arange(n, dtype=np.int32)
+
+        def pad_colors(a, fill, k):
+            a = jnp.asarray(a)
+            return jnp.pad(a, ((0, nc - k), (0, 0)), constant_values=fill)
+
+        st["partners"] = jnp.stack(
+            [
+                jnp.asarray(
+                    np.concatenate(
+                        [p.partners, np.tile(idrow[None, :], (nc - p.n_colors, 1))]
+                    )
+                    if nc > p.n_colors
+                    else p.partners
+                )
+                for p in plans
+            ]
+        )
+        st["color_edge_uid"] = jnp.stack(
+            [pad_colors(p.color_edge_uid, -1, p.n_colors) for p in plans]
+        )
+        st["color_w"] = jnp.stack([pad_colors(p.color_w, 0.0, p.n_colors) for p in plans])
+        st["color_raw_w"] = jnp.stack(
+            [pad_colors(p.color_raw_w, 0.0, p.n_colors) for p in plans]
+        )
+        st["self_w"] = jnp.stack([p.self_w for p in plans])
+        st["raw_self_w"] = jnp.stack([p.raw_self_w for p in plans])
+    return st
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSchedule:
+    """A time-varying mixing operator: K compiled ``CommPlan``s + a round map.
+
+    The K plans share one backend, one failure model and one shape envelope
+    (``_stack_plans``), so ``select(round)`` — a handful of gathers at a
+    traced plan index — yields a ``CommPlan`` view *inside* jit/scan/vmap:
+    the executor's scanned round body switches operators by round index with
+    no host round-trip, and the gossip engine estimates on the dynamic graph
+    nodes actually see.
+
+    Contracts:
+    * K = 1 is the static case and stays **bit-identical** to the plain
+      ``CommPlan`` path: ``select`` returns the underlying plan itself (no
+      gather, no padding) and ``round_key`` leaves failure keys untouched.
+    * K > 1 folds the active plan index into every failure key
+      (``round_key``), so resampled plans draw independent failures.
+    * All plans must share the node count; data sizes are per-node and
+      shared across plans.
+    """
+
+    plans: tuple[CommPlan, ...]
+    round_map: RoundMap
+    stacked: dict[str, jax.Array] = dataclasses.field(default_factory=dict, repr=False)
+    n_edges_env: int = 0
+
+    # ------------------------------------------------------------- metadata
+    @property
+    def k(self) -> int:
+        return len(self.plans)
+
+    @property
+    def n(self) -> int:
+        return self.plans[0].n
+
+    @property
+    def backend(self) -> str:
+        return self.plans[0].backend
+
+    @property
+    def failures(self) -> FailureModel:
+        return self.plans[0].failures
+
+    @property
+    def data_sizes(self) -> np.ndarray | None:
+        return self.plans[0].data_sizes
+
+    @property
+    def graph(self) -> Graph:
+        """The round-0 plan's graph — size metadata and the "what a node sees
+        at estimation start" anchor (degrees payloads, walker start checks)."""
+        return self.plans[0].graph
+
+    # ------------------------------------------------------------ selection
+    def plan_index(self, round_index) -> jax.Array:
+        """Traceable round → plan index (int32 scalar)."""
+        r = jnp.asarray(round_index, jnp.int32)
+        if self.k == 1:
+            return jnp.zeros_like(r)
+        m = self.round_map
+        if m.kind == "cyclic":
+            return (r // m.period) % self.k
+        seq = jnp.asarray(m.sequence)
+        return seq[r % seq.shape[0]]
+
+    def round_key(self, key: jax.Array | None, round_index) -> jax.Array | None:
+        """Fold the active plan id into a per-round failure key (satellite
+        contract): K > 1 resampled plans draw independent failures; K = 1
+        leaves the key untouched, reproducing the static plan's draws
+        exactly."""
+        if key is None or self.k == 1:
+            return key
+        return jax.random.fold_in(key, self.plan_index(round_index))
+
+    def select(self, round_index) -> CommPlan:
+        """The round's ``CommPlan``: K = 1 → the plan itself (bit-identical
+        static path); K > 1 → a gathered view over the stacked envelope,
+        traceable in ``round_index``.  The view's ``graph`` field is the
+        round-0 graph (size metadata only) and its ``n_edges`` is the shared
+        envelope, so failure draws have one static shape for every round."""
+        if self.k == 1:
+            return self.plans[0]
+        i = self.plan_index(round_index)
+        t = lambda name: (
+            jnp.take(self.stacked[name], i, axis=0) if name in self.stacked else None
+        )
+        return CommPlan(
+            graph=self.plans[0].graph,
+            backend=self.backend,
+            failures=self.failures,
+            data_sizes=self.plans[0].data_sizes,
+            receive=t("receive"),
+            adjacency=t("adjacency"),
+            edge_uid_matrix=t("edge_uid_matrix"),
+            src=t("src"),
+            dst=t("dst"),
+            edge_uid=t("edge_uid"),
+            edge_w=t("edge_w"),
+            self_w=t("self_w"),
+            raw_edge_w=t("raw_edge_w"),
+            raw_self_w=t("raw_self_w"),
+            slot_idx=t("slot_idx"),
+            slot_w=t("slot_w"),
+            hyb_self_w=t("hyb_self_w"),
+            hub_rows=t("hub_rows"),
+            hub_m=t("hub_m"),
+            partners=t("partners"),
+            color_edge_uid=t("color_edge_uid"),
+            color_w=t("color_w"),
+            color_raw_w=t("color_raw_w"),
+            n_edges=self.n_edges_env,
+        )
+
+    # ------------------------------------------------------------ execution
+    def mix(self, params: PyTree, round_index, key: jax.Array | None = None) -> PyTree:
+        """One DecAvg round under the plan active at ``round_index``."""
+        return self.select(round_index).mix(params, self.round_key(key, round_index))
+
+    def spread(self, values: jax.Array, round_index, key: jax.Array | None = None) -> jax.Array:
+        """One send-form (push) round under the active plan."""
+        return self.select(round_index).spread(values, self.round_key(key, round_index))
+
+    def spread_min(
+        self, values: jax.Array, round_index, key: jax.Array | None = None
+    ) -> jax.Array:
+        """One min-exchange round under the active plan (leaderless sketches)."""
+        return self.select(round_index).spread_min(values, self.round_key(key, round_index))
+
+    def round_masks(self, key: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Envelope-width failure draws — what every selected plan consumes.
+        Host references replaying a schedule must draw at this width (then
+        index masks by the active plan's own edge uids)."""
+        return _draw_failure_masks(self.failures, self.n_edges_env, self.n, key)
+
+    def stacked_csr(self) -> dict[str, jax.Array]:
+        """Stacked CSR views of every plan's graph, padded to one envelope:
+        ``indptr`` (K, n+1), ``indices``/``uid`` (K, nnz_env), ``deg`` (K, n)
+        int32 and ``degrees`` (K, n) float32 — the random-walk degree
+        pollers' per-round transition tables (``repro.gossip.walker``)."""
+        graphs = [p.graph for p in self.plans]
+        csrs = [g.csr() for g in graphs]
+        nnz = max(len(c[1]) for c in csrs)
+        pad = lambda a: np.pad(a, (0, nnz - len(a)))
+        return dict(
+            indptr=jnp.asarray(np.stack([c[0] for c in csrs])),
+            indices=jnp.asarray(np.stack([pad(c[1]) for c in csrs])),
+            uid=jnp.asarray(np.stack([pad(c[2]) for c in csrs])),
+            deg=jnp.asarray(np.stack([np.diff(c[0]).astype(np.int32) for c in csrs])),
+            degrees=jnp.asarray(
+                np.stack([g.degrees for g in graphs]), jnp.float32
+            ),
+        )
+
+    # ------------------------------------------------------------- plumbing
+    def with_options(
+        self,
+        *,
+        backend: str | None = None,
+        data_sizes: np.ndarray | None = None,
+        failures: FailureModel | None = None,
+    ) -> "PlanSchedule":
+        """Recompile the whole schedule with some knobs replaced."""
+        return compile_schedule(
+            [p.graph for p in self.plans],
+            backend=backend or self.backend,
+            data_sizes=self.data_sizes if data_sizes is None else data_sizes,
+            failures=failures or self.failures,
+            round_map=self.round_map,
+        )
+
+
+def compile_schedule(
+    graphs: Sequence[Graph],
+    backend: str = "auto",
+    data_sizes: np.ndarray | Sequence[float] | None = None,
+    failures: FailureModel | None = None,
+    round_map: RoundMap | None = None,
+) -> PlanSchedule:
+    """Lower K graphs (+ a round→plan map) into a ``PlanSchedule``.
+
+    Every graph compiles through ``compile_plan`` with the same backend /
+    data sizes / failure model; the per-plan buffers are then stacked into
+    the shared shape envelope.  ``round_map`` defaults to ``cyclic_map(1)``
+    (round-robin); ``topology.churn_sequence`` builds Markov-churned graph
+    sequences to feed here.
+    """
+    graphs = list(graphs)
+    if not graphs:
+        raise ValueError("compile_schedule needs at least one graph")
+    if len({g.n for g in graphs}) != 1:
+        raise ValueError(
+            f"all plans in a schedule must share the node count, got "
+            f"{[g.n for g in graphs]}"
+        )
+    if backend == "auto":
+        backend = "dense" if graphs[0].n <= 64 else "sparse"
+    plans = tuple(
+        compile_plan(g, backend=backend, data_sizes=data_sizes, failures=failures)
+        for g in graphs
+    )
+    round_map = round_map or cyclic_map(1)
+    if round_map.kind == "sequence" and int(np.max(round_map.sequence)) >= len(plans):
+        raise ValueError(
+            f"round map references plan {int(np.max(round_map.sequence))} but the "
+            f"schedule holds only {len(plans)} plans"
+        )
+    stacked = _stack_plans(plans) if len(plans) > 1 else {}
+    return PlanSchedule(
+        plans=plans,
+        round_map=round_map,
+        stacked=stacked,
+        n_edges_env=max(p.n_edges for p in plans),
     )

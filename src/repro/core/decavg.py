@@ -175,22 +175,25 @@ def mix_pytree_colored(
     ``ppermute`` (matchings are involutions, hence valid permutations), and
     ``color_w`` / ``self_w`` must be passed as node-sharded operands (their
     local shards).  Without ``axis_name`` the same schedule executes as
-    node-axis gathers — identical math, single process.
+    node-axis gathers — identical math, single process — and ``partners``
+    may be a *traced* array (a ``PlanSchedule``-selected colour table); the
+    collective rendering needs static host perms and keeps requiring numpy.
     """
-    partners = np.asarray(partners)
-    n_colors, n = partners.shape
-
     if axis_name is None:
+        partners = jnp.asarray(partners)
+        n_colors = partners.shape[0]
 
         def mix_leaf(x: jax.Array) -> jax.Array:
             acc = _bcast(self_w, x.ndim) * x.astype(jnp.float32)
             for c in range(n_colors):
-                shifted = jnp.take(x, jnp.asarray(partners[c]), axis=0)
+                shifted = jnp.take(x, partners[c], axis=0)
                 acc = acc + _bcast(color_w[c], x.ndim) * shifted.astype(jnp.float32)
             return acc.astype(x.dtype)
 
         return jax.tree_util.tree_map(mix_leaf, params)
 
+    partners = np.asarray(partners)
+    n_colors, n = partners.shape
     axis_size = jax.lax.psum(1, axis_name)
     if axis_size != n:
         raise ValueError(

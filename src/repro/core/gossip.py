@@ -35,6 +35,8 @@ __all__ = [
     "effective_send_matrix",
     "push_sum_failures",
     "power_iteration_norm_reference",
+    "min_spread_reference",
+    "estimate_size_sketch_reference",
 ]
 
 
@@ -148,6 +150,64 @@ def power_iteration_norm_reference(
         # to gain = 1 there — see repro.gossip.make_gain_estimator)
         "reached": avg[:, 1] > 1e-20,
     }
+
+
+def min_spread_reference(
+    graph: Graph,
+    values: np.ndarray,
+    edge_keep: np.ndarray | None = None,
+    node_active: np.ndarray | None = None,
+) -> np.ndarray:
+    """One round of neighbourhood min-exchange under a failure draw.
+
+    ``out[i] = min(values[i], min over i's surviving neighbourhood)`` — the
+    transport of the leaderless exponential-random-minimum size sketches
+    (``repro.gossip.estimate_size_leaderless`` is the device rendering;
+    ``CommPlan.spread_min`` executes the same masks).  Failure indexing
+    matches ``effective_send_matrix``: one Bernoulli per *undirected* edge
+    (``Graph.edge_list()`` order) and one per node; a node always keeps its
+    own values.
+    """
+    a = graph.adjacency.astype(bool).copy()
+    if edge_keep is not None:
+        edges = graph.edge_list()
+        dead = np.asarray(edge_keep) == 0
+        if dead.any():
+            u, v = edges[dead, 0], edges[dead, 1]
+            a[u, v] = False
+            a[v, u] = False
+    if node_active is not None:
+        act = np.asarray(node_active).astype(bool)
+        a = a & act[:, None] & act[None, :]
+    x = np.asarray(values, dtype=np.float64)
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    nbr = np.where(a[:, :, None], x[None, :, :], np.inf).min(axis=1)
+    out = np.minimum(x, nbr)  # self-inclusion: a node always keeps its own
+    return out[:, 0] if squeeze else out
+
+
+def estimate_size_sketch_reference(
+    graph: Graph,
+    sketches: np.ndarray,
+    rounds: int,
+    masks: list[tuple[np.ndarray | None, np.ndarray | None]] | None = None,
+) -> np.ndarray:
+    """Leaderless n̂ reference: ``rounds`` of min-exchange of the given
+    (n, m) Exp(1) sketches, then the unbiased inverse-mean estimator
+    ``n̂ = (m - 1) / Σ_sketches min``.  ``masks``, when given, supplies one
+    (edge_keep, node_active) failure draw per round (same indexing as
+    ``effective_send_matrix``)."""
+    x = np.asarray(sketches, dtype=np.float64)
+    if masks is None:
+        masks = [(None, None)] * rounds
+    if len(masks) != rounds:
+        raise ValueError(f"need {rounds} per-round masks, got {len(masks)}")
+    for ek, na in masks:
+        x = min_spread_reference(graph, x, ek, na)
+    m = x.shape[1]
+    return (m - 1) / np.maximum(x.sum(axis=1), 1e-300)
 
 
 def estimate_size(graph: Graph, rounds: int, leader: int = 0) -> np.ndarray:

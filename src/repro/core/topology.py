@@ -33,6 +33,7 @@ __all__ = [
     "torus_lattice",
     "star",
     "from_adjacency",
+    "churn_sequence",
 ]
 
 
@@ -386,3 +387,61 @@ def star(n: int) -> Graph:
     a[0, 1:] = 1.0
     a[1:, 0] = 1.0
     return Graph(a, name=f"star-{n}")
+
+
+def churn_sequence(
+    graph: Graph,
+    k_plans: int,
+    churn_rate: float,
+    seed: int = 0,
+    require_connected: bool = True,
+) -> list[Graph]:
+    """Seeded Markov chain of churned topology snapshots (edge up/down).
+
+    Snapshot t+1 perturbs snapshot t (not the base graph — churn compounds,
+    like real mobility/link churn): every live edge drops independently with
+    probability ``churn_rate`` and the same number of fresh edges appears
+    uniformly among the currently absent pairs, so the link budget is
+    conserved in expectation while the wiring drifts.  Snapshot 0 is the
+    base graph itself, so ``churn_rate = 0`` (or ``k_plans = 1``) reproduces
+    the static topology exactly.
+
+    The snapshots feed ``commplan.compile_schedule``; per-round *node*
+    dropout composes orthogonally through ``FailureModel.node_p`` (a node
+    vanishing for one round is a failure draw, not a topology change).
+    Unweighted graphs only: churned edges appear with weight 1.
+    """
+    if k_plans < 1:
+        raise ValueError("churn_sequence needs k_plans >= 1")
+    if not 0.0 <= churn_rate < 1.0:
+        raise ValueError(f"churn_rate must be in [0, 1), got {churn_rate}")
+    if graph.directed:
+        raise ValueError("churn_sequence supports undirected graphs only")
+    rng = np.random.default_rng(seed)
+    a = graph.adjacency.copy()
+    out = [graph]
+    for t in range(1, k_plans):
+        for _attempt in range(100):
+            b = a.copy()
+            iu, ju = np.nonzero(np.triu(b, k=1))
+            drop = rng.random(len(iu)) < churn_rate
+            b[iu[drop], ju[drop]] = 0.0
+            b[ju[drop], iu[drop]] = 0.0
+            cu, cv = np.nonzero(np.triu(b == 0, k=1))
+            n_add = min(int(drop.sum()), len(cu))
+            if n_add:
+                pick = rng.choice(len(cu), size=n_add, replace=False)
+                b[cu[pick], cv[pick]] = 1.0
+                b[cv[pick], cu[pick]] = 1.0
+            g = Graph(b.astype(np.float32), name=f"{graph.name}-churn{t}")
+            if not require_connected or g.is_connected():
+                break
+        else:
+            raise RuntimeError(
+                f"churn_sequence: no connected churned snapshot found after 100 "
+                f"attempts (n={graph.n}, churn_rate={churn_rate}) — lower the "
+                "rate or pass require_connected=False"
+            )
+        out.append(g)
+        a = b
+    return out

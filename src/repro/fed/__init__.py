@@ -3,6 +3,7 @@ from .executor import (
     TrajectoryConfig,
     run_sweep,
     run_trajectory,
+    run_warmup_sweep,
     run_warmup_trajectory,
     stack_states,
     unstack_states,

@@ -45,6 +45,7 @@ __all__ = [
     "TrajectoryConfig",
     "run_trajectory",
     "run_warmup_trajectory",
+    "run_warmup_sweep",
     "run_sweep",
     "stack_states",
     "unstack_states",
@@ -175,19 +176,21 @@ def _build_chunk_fn(
             extra = ()
         return state, (metrics["train_loss"].astype(jnp.float32), *extra)
 
-    def chunk(state, sched_chunk, mask_chunk):
+    def chunk_inner(state, sched_chunk, mask_chunk):
         return jax.lax.scan(body, state, (sched_chunk, mask_chunk))
 
+    chunk = chunk_inner
     if sweep:
-        chunk = jax.vmap(chunk, in_axes=(0, 0 if schedule_mapped else None, None))
+        chunk = jax.vmap(chunk_inner, in_axes=(0, 0 if schedule_mapped else None, None))
     # Donating the carried state lets XLA reuse the ensemble's buffers across
     # chunk calls (a no-op warning-free pass-through on CPU).  _drive_chunks
     # copies the caller's state before the first call so donation never
-    # invalidates it (train_loop drop-in contract).  The raw (unjitted)
-    # chunk is returned too so ``run_warmup_trajectory`` can inline it after
-    # its estimation/init prologue inside one fused program.
+    # invalidates it (train_loop drop-in contract).  The raw *unvmapped*
+    # chunk is returned too so the fused warmups (``run_warmup_trajectory``,
+    # ``run_warmup_sweep``) can inline it after their estimation/init
+    # prologues — the sweep re-vmaps the whole prologue+chunk composite.
     donate = jax.default_backend() != "cpu"
-    return jax.jit(chunk, donate_argnums=(0,) if donate else ()), donate, chunk
+    return jax.jit(chunk, donate_argnums=(0,) if donate else ()), donate, chunk_inner
 
 
 def _empty_history() -> dict[str, list]:
@@ -338,6 +341,101 @@ def run_warmup_trajectory(
     )
     hist = _assemble_history(mask_np, cols, eval_fn is not None, track_sigmas)
     return state, hist, np.asarray(gains)
+
+
+def run_warmup_sweep(
+    keys: Sequence[jax.Array] | jax.Array,
+    round_fn: Callable[[DFLState, Any], tuple[DFLState, dict]],
+    xs: np.ndarray,
+    ys: np.ndarray,
+    schedule: np.ndarray,
+    *,
+    n_nodes: int,
+    init_one: Callable[[jax.Array, jax.Array], PyTree],
+    optimizer,
+    estimate_gains: Callable[..., jax.Array],
+    budgets: Sequence[int] | np.ndarray | None = None,
+    n_rounds: int,
+    eval_every: int = 0,
+    eval_fn=None,
+    eval_batch=None,
+    track_sigmas: bool = False,
+    chunk_size: int = 0,
+    schedule_per_run: bool = False,
+    b_local: int | None = None,
+) -> tuple[DFLState, list[dict[str, list]], np.ndarray]:
+    """Vmapped fused warmups: a (budget × seed) grid of **estimate → per-node
+    gain → init → train** trajectories as one program (ROADMAP item).
+
+    ``keys`` is one PRNG key per run (the per-run analogue of
+    ``run_warmup_trajectory``'s ``key``); ``budgets``, when given, is one
+    gossip budget per run, forwarded as ``estimate_gains(key, budget)`` —
+    build the estimator at the grid's *max* budget and let it mask the tail
+    rounds (``make_gain_estimator``'s ``budget`` argument), so every run
+    shares one static program shape.  The masking keys its phase boundary
+    off the *live* budget, so a budget-b cell consumes exactly the failure
+    draws a standalone budget-b estimator would — failures included.
+    Without ``budgets`` the estimator is called as ``estimate_gains(key)``.
+
+    Per-run semantics match ``run_warmup_trajectory`` run for run (same key
+    split, same phases) up to vmap's usual fp-reassociation slack; dataset,
+    topology and — unless ``schedule_per_run`` — batch order are shared
+    across the sweep like ``run_sweep``.
+
+    Returns ``(stacked_states, histories, gains)`` with ``gains`` the
+    realised (n_runs, n_nodes) per-node vectors.
+    """
+    keys = jnp.stack([jnp.asarray(k) for k in keys]) if isinstance(keys, (list, tuple)) else jnp.asarray(keys)
+    n_runs = int(keys.shape[0])
+    cfg = TrajectoryConfig(n_rounds, eval_every, track_sigmas, chunk_size)
+    if schedule_per_run:
+        sched = np.stack(
+            [_as_round_schedule(s, n_rounds, b_local) for s in np.asarray(schedule)]
+        )
+    else:
+        sched = _as_round_schedule(schedule, n_rounds, b_local)
+    sched_d = jnp.asarray(sched)
+    xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
+    eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
+    chunk_fn, _, chunk_inner = _build_chunk_fn(
+        round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas,
+        sweep=True, schedule_mapped=schedule_per_run,
+    )
+    has_budget = budgets is not None
+    if has_budget and len(np.asarray(budgets)) != n_runs:
+        raise ValueError(
+            f"budgets has {len(np.asarray(budgets))} entries for {n_runs} keys"
+        )
+    b_arr = jnp.asarray(np.asarray(budgets if has_budget else np.zeros(n_runs)), jnp.int32)
+
+    def one(k, b, sched_c, mask_c):
+        k_est, k_init = jax.random.split(k)
+        gains = estimate_gains(k_est, b) if has_budget else estimate_gains(k_est)
+        state = init_fl_state(k_init, n_nodes, init_one, optimizer, gains=gains)
+        state, out = chunk_inner(state, sched_c, mask_c)
+        return state, out, gains
+
+    warmup_chunk = jax.jit(
+        jax.vmap(one, in_axes=(0, 0, 0 if schedule_per_run else None, None))
+    )
+    mask_np = cfg.eval_mask()
+    axis = 1 if schedule_per_run else 0
+    r0, r1 = cfg.chunks()[0]
+    states, out, gains = warmup_chunk(
+        keys,
+        b_arr,
+        jax.lax.slice_in_dim(sched_d, r0, r1, axis=axis),
+        jnp.asarray(mask_np[r0:r1]),
+    )
+    states, cols = _drive_chunks(
+        chunk_fn, states, sched_d, mask_np, cfg,
+        round_axis=axis, skip=1, head_outs=[out],
+    )
+    hists = [
+        _assemble_history(mask_np, [c[i] for c in cols], eval_fn is not None, track_sigmas)
+        for i in range(n_runs)
+    ]
+    return states, hists, np.asarray(gains)
 
 
 def run_sweep(

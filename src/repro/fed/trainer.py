@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.commplan import CommPlan, FailureModel, compile_plan
+from repro.core.commplan import CommPlan, FailureModel, PlanSchedule, compile_plan
 from repro.core.initialisation import InitConfig
 from repro.core.topology import Graph
 from repro.optim import Optimizer
@@ -101,7 +101,7 @@ def _local_steps(
 def make_round_fn(
     loss_fn: LossFn,
     optimizer: Optimizer,
-    plan: CommPlan | Graph,
+    plan: CommPlan | PlanSchedule | Graph,
     data_sizes: np.ndarray | None = None,
     link_p: float = 1.0,
     node_p: float = 1.0,
@@ -110,8 +110,11 @@ def make_round_fn(
 ):
     """Build the jittable communication-round function.
 
-    ``plan`` is a compiled ``CommPlan`` (``core.commplan.compile_plan``); a
-    raw ``Graph`` is accepted for convenience and compiled with the "auto"
+    ``plan`` is a compiled ``CommPlan`` (``core.commplan.compile_plan``) or a
+    time-varying ``PlanSchedule`` (``compile_schedule``) — the round body
+    then mixes with the plan active at ``state.round``, switching operators
+    by round index *inside* any enclosing scan (DESIGN.md §13); a raw
+    ``Graph`` is accepted for convenience and compiled with the "auto"
     backend.  ``data_sizes``/``link_p``/``node_p`` override the plan's own
     settings when given (the plan is recompiled, cheap and host-side).
 
@@ -128,6 +131,7 @@ def make_round_fn(
         plan = plan.with_options(
             data_sizes=data_sizes, failures=failures if failures.active else None
         )
+    scheduled = isinstance(plan, PlanSchedule)
 
     def round_fn(state: DFLState, node_batches: Any) -> tuple[DFLState, dict]:
         rng, k_mix = jax.random.split(state.rng)
@@ -137,7 +141,11 @@ def make_round_fn(
         )(state.params, state.opt_state, node_batches)
 
         if aggregate:
-            params = plan.mix(params, key=k_mix if plan.failures.active else None)
+            key = k_mix if plan.failures.active else None
+            if scheduled:
+                params = plan.mix(params, state.round, key)
+            else:
+                params = plan.mix(params, key=key)
             if reinit_opt:  # Algorithm 1 line 15
                 opt_state = jax.vmap(optimizer.init)(params)
 

@@ -21,6 +21,7 @@ from .engine import (
     estimate_all,
     estimate_mean_degree,
     estimate_size,
+    estimate_size_leaderless,
     gain_from_degree_sample,
     gains_from_estimates,
     make_gain_estimator,
@@ -37,6 +38,7 @@ __all__ = [
     "estimate_all",
     "estimate_mean_degree",
     "estimate_size",
+    "estimate_size_leaderless",
     "fit_contraction_rate",
     "gain_from_degree_sample",
     "gains_from_estimates",

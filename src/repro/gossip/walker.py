@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.commplan import CommPlan
+from repro.core.commplan import CommPlan, PlanSchedule
 from repro.core.topology import Graph
 
 __all__ = ["poll_degrees_device"]
@@ -42,7 +42,7 @@ def poll_degrees_device(
     n_walks: int,
     key: jax.Array,
     correct_bias: bool = True,
-    plan: CommPlan | None = None,
+    plan: CommPlan | PlanSchedule | None = None,
 ) -> jax.Array:
     """Run ``n_walks`` walks of ``walk_length`` steps from each start node.
 
@@ -50,8 +50,17 @@ def poll_degrees_device(
     array of ids (e.g. ``arange(n)`` for every-node-polls-itself, the truly
     uncoordinated setting) → returns (s, n_walks).  Fully traceable, so the
     fused warmup can inline it next to the push-sum phases.
+
+    ``plan`` may be a ``PlanSchedule``: step r then transitions through the
+    CSR of the plan active at round r (the walker explores the *dynamic*
+    graph), failure draws fold the active plan id like every other gossip
+    round, and the polled degree is the walker's final node's degree in the
+    plan active at the last step — the degree a node would actually observe
+    when the poll ends.
     """
-    indptr_np, indices_np, uid_np = graph.csr()
+    schedule = plan if isinstance(plan, PlanSchedule) and plan.k > 1 else None
+    ref_graph = plan.graph if schedule is not None else graph
+    indptr_np, indices_np, uid_np = ref_graph.csr()
     if len(indices_np) == 0:
         raise ValueError("poll_degrees_device: graph has no edges — nothing to poll")
     deg_np = (indptr_np[1:] - indptr_np[:-1]).astype(np.int32)
@@ -63,12 +72,16 @@ def poll_degrees_device(
             "neighbours — every walk would be stuck and the 1/k bias "
             "correction would divide by zero"
         )
-    indptr = jnp.asarray(indptr_np[:-1])
-    indices = jnp.asarray(indices_np)
-    uid = jnp.asarray(uid_np)
-    deg = jnp.asarray(deg_np)
-    degrees = jnp.asarray(graph.degrees, jnp.float32)
-    with_failures = plan is not None and plan.failures.active
+    if schedule is not None:
+        csr = schedule.stacked_csr()
+        with_failures = schedule.failures.active
+    else:
+        indptr = jnp.asarray(indptr_np[:-1])
+        indices = jnp.asarray(indices_np)
+        uid = jnp.asarray(uid_np)
+        deg = jnp.asarray(deg_np)
+        degrees = jnp.asarray(graph.degrees, jnp.float32)
+        with_failures = plan is not None and plan.failures.active
 
     squeeze = np.ndim(start) == 0
     v = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(start, jnp.int32))[:, None],
@@ -76,10 +89,24 @@ def poll_degrees_device(
 
     k_walk, k_resample = jax.random.split(key)
 
-    def step(v, k):
+    def step(v, rk):
+        r, k = rk
         if with_failures:
             k, k_fail = jax.random.split(k)
         u = jax.random.uniform(k, v.shape)
+        if schedule is not None:
+            i = schedule.plan_index(r)
+            deg_r = csr["deg"][i]
+            d = deg_r[v]
+            idx = jnp.where(d > 0, csr["indptr"][i][v] + (u * d).astype(jnp.int32), 0)
+            nxt = csr["indices"][i][idx]
+            ok = d > 0
+            if with_failures:
+                edge_keep, active = schedule.round_masks(
+                    schedule.round_key(k_fail, r)
+                )
+                ok = ok & edge_keep[csr["uid"][i][idx]] & active[v] & active[nxt]
+            return jnp.where(ok, nxt, v), None
         d = deg[v]
         idx = jnp.where(d > 0, indptr[v] + (u * d).astype(jnp.int32), 0)
         nxt = indices[idx]
@@ -91,7 +118,11 @@ def poll_degrees_device(
             ok = ok & edge_keep[uid[idx]] & active[v] & active[nxt]
         return jnp.where(ok, nxt, v), None
 
-    v, _ = jax.lax.scan(step, v, jax.random.split(k_walk, walk_length))
+    v, _ = jax.lax.scan(
+        step, v, (jnp.arange(walk_length), jax.random.split(k_walk, walk_length))
+    )
+    if schedule is not None:
+        degrees = csr["degrees"][schedule.plan_index(walk_length - 1)]
     ks = degrees[v]  # (s, n_walks)
     if correct_bias:
         # importance resample ∝ 1/k, per start row, to undo the ∝ k visit

@@ -12,6 +12,10 @@ Examples:
     # truly uncoordinated: per-node gains from on-device gossip estimation,
     # fused estimate→init→train (no host round-trip between phases)
     python -m repro.launch.train --model mlp --topology ba --uncoordinated-init --estimate-rounds 24
+    # time-varying topology: train AND estimate over a Markov-churned
+    # PlanSchedule (operators switch by round index inside the fused scan)
+    python -m repro.launch.train --model mlp --topology kregular --topology-schedule churn \
+        --plans 8 --churn-rate 0.2 --uncoordinated-init --leaderless
 """
 from __future__ import annotations
 
@@ -25,7 +29,7 @@ import numpy as np
 from repro.checkpoint import save_train_state
 from repro.configs import get_reduced_config
 from repro.core import topology as T
-from repro.core.commplan import FailureModel, compile_plan
+from repro.core.commplan import FailureModel, compile_plan, compile_schedule, cyclic_map
 from repro.core.initialisation import InitConfig, gain_from_graph
 from repro.data import (
     batch_index_schedule,
@@ -81,6 +85,19 @@ def main() -> None:
     p.add_argument("--zipf", type=float, default=0.0, help="non-iid Zipf alpha (0 = iid)")
     p.add_argument("--link-p", type=float, default=1.0)
     p.add_argument("--node-p", type=float, default=1.0)
+    p.add_argument(
+        "--topology-schedule", choices=["static", "cyclic", "churn"], default="static",
+        help="time-varying topology (PlanSchedule): 'cyclic' cycles --plans "
+        "independently re-sampled graphs of the chosen family, 'churn' walks "
+        "a seeded Markov chain of edge up/down rewirings of the base graph "
+        "(--churn-rate); both switch operators by round index inside the "
+        "fused scan",
+    )
+    p.add_argument("--plans", type=int, default=4, help="K: plans in the schedule")
+    p.add_argument("--plan-period", type=int, default=1,
+                   help="rounds each plan stays active before the schedule advances")
+    p.add_argument("--churn-rate", type=float, default=0.1,
+                   help="per-snapshot edge resampling probability (churn schedule)")
     p.add_argument("--no-gain-correction", action="store_true")
     p.add_argument(
         "--uncoordinated-init", action="store_true",
@@ -92,6 +109,11 @@ def main() -> None:
                    help="gossip budget: power-iteration and push-sum rounds each")
     p.add_argument("--estimate-mode", choices=["vnorm", "alpha", "degree"], default="vnorm",
                    help="§4.4 knowledge regime: gossip ‖v̂‖ / size-only n̂^α / degree polling")
+    p.add_argument(
+        "--leaderless", action="store_true",
+        help="size estimation by exponential-random-minimum sketches instead "
+        "of the leader one-hot — no distinguished node",
+    )
     p.add_argument(
         "--legacy-loop", action="store_true",
         help="per-round dispatch via train_loop instead of the fused executor",
@@ -107,6 +129,25 @@ def main() -> None:
 
     n = args.nodes
     graph = build_graph(args.topology, n, args.seed)
+    sched_graphs = None
+    mix_plan = graph
+    if args.topology_schedule != "static":
+        if args.topology_schedule == "churn":
+            sched_graphs = T.churn_sequence(
+                graph, args.plans, args.churn_rate, seed=args.seed + 1
+            )
+        else:  # cyclic: independently re-sampled graphs of the same family
+            sched_graphs = [graph] + [
+                build_graph(args.topology, n, args.seed + 101 * t)
+                for t in range(1, args.plans)
+            ]
+        # failures ride in via make_round_fn's link_p/node_p override
+        mix_plan = compile_schedule(sched_graphs, round_map=cyclic_map(args.plan_period))
+        print(
+            f"schedule: {args.topology_schedule} K={mix_plan.k} "
+            f"period={args.plan_period}"
+            + (f" churn_rate={args.churn_rate}" if args.topology_schedule == "churn" else "")
+        )
     gain = 1.0 if args.no_gain_correction else gain_from_graph(graph)
     print(f"graph={graph.name} ‖v_steady‖⁻¹ gain={gain:.2f}" + (" (DISABLED)" if args.no_gain_correction else ""))
     opt = sgd(1e-3, 0.5) if args.optimizer == "sgd" else adamw(1e-3)
@@ -165,18 +206,23 @@ def main() -> None:
     init_one = init_with(icfg)
     init_one_g = lambda k, gn: init_with(icfg.replace(gain=gn))(k)
     key = jax.random.PRNGKey(args.seed)
-    round_fn = make_round_fn(loss_fn, opt, graph, link_p=args.link_p, node_p=args.node_p)
+    round_fn = make_round_fn(loss_fn, opt, mix_plan, link_p=args.link_p, node_p=args.node_p)
     eval_every = max(1, args.rounds // 20)
     estimate_fn = None
     if args.uncoordinated_init:
         # estimation rides the same links — and the same failure model — as
-        # the training rounds (unit-weight plan: Eq. 3 send operator)
-        est_plan = compile_plan(
-            graph, failures=FailureModel(link_p=args.link_p, node_p=args.node_p)
-        )
+        # the training rounds (unit-weight plan: Eq. 3 send operator); over a
+        # topology schedule the gossip itself follows the dynamic graph
+        fm = FailureModel(link_p=args.link_p, node_p=args.node_p)
+        if sched_graphs is not None:
+            est_plan = compile_schedule(
+                sched_graphs, failures=fm, round_map=cyclic_map(args.plan_period)
+            )
+        else:
+            est_plan = compile_plan(graph, failures=fm)
         estimate_fn = make_gain_estimator(
             est_plan, pi_rounds=args.estimate_rounds, ps_rounds=args.estimate_rounds,
-            mode=args.estimate_mode,
+            mode=args.estimate_mode, leaderless=args.leaderless,
         )
     if args.arch or args.legacy_loop:
         # token streams sample per-batch windows (no gather schedule yet), so

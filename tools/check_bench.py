@@ -20,6 +20,11 @@ SCHEMAS = {
         ["records", "rounds_block"],
         ["family", "n", "us_dense", "us_sparse", "sparse_speedup_vs_dense"],
     ),
+    "BENCH_churn.json": (
+        ["records"],
+        ["family", "n", "k_plans", "churn_rate", "sec_per_round_schedule",
+         "overhead_vs_static"],
+    ),
 }
 DEFAULT_SCHEMA = (["records"], [])
 
