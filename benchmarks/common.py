@@ -19,6 +19,7 @@ from repro.fed import (
     init_fl_state,
     make_eval_fn,
     make_round_fn,
+    run_event_trajectory,
     run_sweep,
     run_trajectory,
     stack_states,
@@ -160,6 +161,51 @@ def run_dfl_mlp_sweep(
         [hists[i * len(seeds) + j] for j in range(len(seeds))] for i in range(len(gains))
     ]
     return grid, sec_per_run
+
+
+def run_dfl_mlp_async(
+    *,
+    n_nodes: int,
+    horizon: float,
+    rate: float = 1.0,
+    graph=None,
+    gain: float | None = None,
+    per_node: int = 128,
+    batch_size: int = 16,
+    b_local: int = 2,
+    hidden=(128, 64),
+    optimizer="sgd",
+    n_bins: int = 10,
+    link_p: float = 1.0,
+    node_p: float = 1.0,
+    seed: int = 0,
+    test_size: int = 512,
+):
+    """One event-driven DFL run of the paper's MLP config: per-edge Poisson
+    clocks at ``rate`` over ``horizon`` units of virtual time, executed as
+    one scanned program (``fed.executor.run_event_trajectory``).  Rate 1
+    with ``horizon = R`` is the message-budget-matched peer of R synchronous
+    rounds.  Returns (history, seconds_per_event, stream).
+    """
+    from repro.core.commplan import FailureModel, compile_plan
+
+    graph, xs, ys, test, loss_fn, opt, eval_fn, init_one = _mlp_setup(
+        n_nodes, graph, per_node, hidden, optimizer, seed, test_size
+    )
+    gain = gain if gain is not None else gain_from_graph(graph)
+    state = init_fl_state(jax.random.PRNGKey(seed), n_nodes, init_one(gain), opt)
+    plan = compile_plan(graph, failures=FailureModel(link_p=link_p, node_p=node_p))
+    stream = T.poisson_event_stream(graph, horizon=horizon, rate=rate, seed=seed + 1)
+    sched = batch_index_schedule(
+        per_node, n_nodes, batch_size, max(int(horizon), 1) * b_local, seed=seed
+    )
+    t0 = time.time()
+    _, hist, _ = run_event_trajectory(
+        state, loss_fn, opt, plan, stream, xs, ys, sched,
+        b_local=b_local, n_bins=n_bins, eval_fn=eval_fn, eval_batch=test,
+    )
+    sec_per_event = (time.time() - t0) / max(stream.n_events, 1)
+    return hist, sec_per_event, stream
 
 
 def run_dfl_mlp_uncoordinated(

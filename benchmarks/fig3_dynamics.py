@@ -18,7 +18,7 @@ from repro.core.initialisation import InitConfig
 from repro.core.mixing import receive_matrix, v_steady_norm
 from repro.core.decavg import mix_pytree
 from repro.data import mnist_like, node_batch_iterator, node_datasets
-from repro.fed import init_fl_state, make_round_fn, sigma_metrics, train_loop
+from repro.fed import init_fl_state, sigma_metrics
 from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
 from repro.optim import sgd
 

@@ -1,0 +1,104 @@
+"""Figure 9: synchronous vs event-driven gossip — convergence per message.
+
+The paper's uncoordinated setting (and Valerio et al.'s coordination-free
+DFL) has no global round barrier; this repo's event rendering (DESIGN.md
+§14) replaces the barrier with per-edge Poisson clocks realised host-side
+into a static ``EventStream`` envelope and scanned on device.  This
+benchmark asks the question the async literature cares about: **at an equal
+transmitted-message budget, does the barrier matter?**
+
+* Per family (ring / k-regular / BA) and size, a synchronous run of R
+  rounds (2·|E| messages per round) is compared against an event-driven run
+  with rate-1 clocks over horizon R — the same expected message budget, no
+  coordination.  Both start from the same gain-corrected init.
+* ``final_test_loss_*`` at the matched budget plus per-event executor cost
+  (``us_per_event``) and the per-bin staleness the virtual clocks measure.
+
+Full mode sweeps n ∈ {64, 256}; quick (CI) mode n ∈ {16, 32} — the
+committed ``BENCH_async.json`` is quick-mode so the CI bench-regression
+gate (``tools/check_bench.py --compare``) diffs like against like.
+
+Schema (``BENCH_async.json``): ``{device, cpu_count, quick, records: [
+{family, n, horizon, messages_sync, messages_event, final_test_loss_sync,
+final_test_loss_event, us_per_event, sec_per_round_sync, ...}]}`` —
+validated (and regression-gated) by ``tools/check_bench.py`` in CI.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from repro.core import topology as T
+
+from .common import emit, run_dfl_mlp, run_dfl_mlp_async
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_async.json"
+
+FAMILIES = {
+    "ring": lambda n, seed: T.ring(n),
+    "kreg": lambda n, seed: T.random_k_regular(n, 8, seed=seed),
+    "ba": lambda n, seed: T.barabasi_albert(n, 4, seed=seed),
+}
+
+
+def run(quick: bool = True) -> None:
+    sizes = (16, 32) if quick else (64, 256)
+    rounds = 30 if quick else 60
+    per_node = 64 if quick else 128
+    records = []
+
+    for family, build in FAMILIES.items():
+        for n in sizes:
+            graph = build(n, 0)
+            m = graph.n_edges
+            hist_sync, spr_sync = run_dfl_mlp(
+                n_nodes=n, graph=graph, rounds=rounds, per_node=per_node,
+                eval_every=max(rounds // 10, 1),
+            )
+            hist_ev, spe, stream = run_dfl_mlp_async(
+                n_nodes=n, graph=graph, horizon=float(rounds), rate=1.0,
+                per_node=per_node, n_bins=10,
+            )
+            rec = {
+                "family": family,
+                "n": n,
+                "horizon": rounds,
+                "n_edges": m,
+                "n_events": stream.n_events,
+                "messages_sync": 2 * m * rounds,
+                "messages_event": 2 * stream.n_events,
+                "final_test_loss_sync": hist_sync["test_loss"][-1],
+                "final_test_loss_event": hist_ev["test_loss"][-1],
+                "mean_staleness": float(np.mean(hist_ev["staleness"])),
+                "us_per_event": spe * 1e6,
+                "sec_per_round_sync": spr_sync,
+            }
+            records.append(rec)
+            emit(
+                f"fig9.{family}.n{n}",
+                rec["us_per_event"],
+                f"event={rec['final_test_loss_event']:.3f};"
+                f"sync={rec['final_test_loss_sync']:.3f};"
+                f"msgs={rec['messages_event']};"
+                f"stale={rec['mean_staleness']:.2f}",
+            )
+
+    OUT.write_text(
+        json.dumps(
+            {
+                "device": str(jax.devices()[0]),
+                "cpu_count": __import__("os").cpu_count(),
+                "quick": quick,
+                "records": records,
+            },
+            indent=2,
+        )
+    )
+    print(f"# wrote {OUT}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

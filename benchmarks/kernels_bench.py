@@ -15,7 +15,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import topology as T
 from repro.core.commplan import BACKENDS, compile_plan

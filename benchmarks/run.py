@@ -24,6 +24,7 @@ from . import (
     fig6_env,
     fig7_constant_data,
     fig8_churn,
+    fig9_async,
     kernels_bench,
     roofline_report,
     rounds_bench,
@@ -39,6 +40,7 @@ MODULES = {
     "fig6": fig6_env,
     "fig7": fig7_constant_data,
     "fig8": fig8_churn,
+    "fig9": fig9_async,
     "kernels": kernels_bench,
     "roofline": roofline_report,
     "rounds": rounds_bench,

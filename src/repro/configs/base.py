@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-import math
 from typing import Literal
 
 import jax.numpy as jnp

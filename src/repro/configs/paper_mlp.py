@@ -1,6 +1,5 @@
 """Paper cfg. A/D (Appendix A, Table A1): MLP 784→512→256→128→10, ReLU,
 MNIST-like data, full communication network."""
-import dataclasses
 
 from .base import ArchConfig
 

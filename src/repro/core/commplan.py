@@ -34,7 +34,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .decavg import mix_pytree, mix_pytree_colored, mix_pytree_hyb, mix_pytree_sparse
+from .decavg import (
+    mix_pytree,
+    mix_pytree_colored,
+    mix_pytree_hyb,
+    mix_pytree_pairwise,
+    mix_pytree_sparse,
+    spread_min_pairwise,
+    spread_pairwise,
+)
 from .mixing import receive_matrix
 from .topology import Graph
 
@@ -124,6 +132,9 @@ class CommPlan:
     color_edge_uid: jax.Array | None = None  # (n_colors, n) int32, -1 unmatched
     color_w: jax.Array | None = None  # (n_colors, n) statically normalised
     color_raw_w: jax.Array | None = None  # (n_colors, n) unnormalised
+    # ---- event-driven (asynchronous) rendering, undirected plans only ----
+    event_uv: jax.Array | None = None  # (max(n_edges,1), 2) int32 endpoints
+    event_w: jax.Array | None = None  # (max(n_edges,1), 2) [M[u,v], M[v,u]]
     n_edges: int = 0  # undirected edge count (failure draw width)
 
     @property
@@ -257,6 +268,72 @@ class CommPlan:
         out = jnp.minimum(x, nbr)
         return out[:, 0] if squeeze else out
 
+    # ------------------------------------------------- event-driven execution
+    def event_keep(self, key: jax.Array) -> jax.Array:
+        """Bool scalar: did this event's exchange survive the failure model?
+
+        The asynchronous analogue of ``round_masks``: one Bernoulli(link_p)
+        for the firing edge plus one Bernoulli(node_p) per endpoint, drawn
+        from the per-event key (callers fold the event index in, mirroring
+        the per-round ``fold_in`` discipline).  A failed draw makes the
+        *exchange* a no-op — no model moves, no message counts; the event
+        executor's endpoints still wake for their local phase, exactly like
+        failed-link nodes keep training in a synchronous round."""
+        k_link, k_node = jax.random.split(key)
+        keep = jnp.bool_(True)
+        if self.failures.link_p < 1.0:
+            keep = keep & (jax.random.uniform(k_link) < self.failures.link_p)
+        if self.failures.node_p < 1.0:
+            act = jax.random.bernoulli(k_node, self.failures.node_p, (2,))
+            keep = keep & act[0] & act[1]
+        return keep
+
+    def _event_edge(self, edge, key: jax.Array | None):
+        """(u, v, w_uv, w_vu) of one event; padding (edge = -1) and failed
+        draws carry exactly-zero weights, i.e. the identity update."""
+        if self.event_uv is None:
+            raise ValueError(
+                "event rendering needs a statically compiled undirected CommPlan "
+                "(PlanSchedule views and directed plans have no event tables)"
+            )
+        if self.failures.active and key is None:
+            raise ValueError("failure model active: event ops need a PRNG key")
+        e = jnp.asarray(edge, jnp.int32)
+        live = e >= 0
+        if self.failures.active:
+            live = live & self.event_keep(key)
+        e0 = jnp.maximum(e, 0)
+        w = self.event_w[e0] * live
+        return self.event_uv[e0, 0], self.event_uv[e0, 1], w[0], w[1], live
+
+    def event_mix(self, params: PyTree, edge, key: jax.Array | None = None) -> PyTree:
+        """One asynchronous DecAvg event: edge ``edge``'s endpoints blend with
+        the plan's receive weights (``w_u ← w_u + M[u,v]·(w_v − w_u)`` and
+        symmetrically), everyone else untouched.  ``edge`` is a traced int32
+        index into ``Graph.edge_list()``; -1 (the event-stream padding) is
+        the identity.  Composing one event per edge reproduces ``mix`` to
+        first order in the weights — the rate-1 parity property the event
+        tests pin down."""
+        u, v, w_uv, w_vu, _ = self._event_edge(edge, key)
+        return mix_pytree_pairwise(params, u, v, w_uv, w_vu)
+
+    def event_spread(self, values: jax.Array, edge, key: jax.Array | None = None) -> jax.Array:
+        """One asynchronous **push** event — the pairwise, mass-conserving
+        rendering of ``spread`` (``s_u ← s_u − M[u,v]·s_u + M[v,u]·s_v``, and
+        symmetrically): ``values.sum(0)`` is invariant event by event, which
+        is what barrier-free push-sum estimation rides."""
+        u, v, w_uv, w_vu, _ = self._event_edge(edge, key)
+        x = jnp.asarray(values, jnp.float32)
+        return spread_pairwise(x, u, v, w_uv, w_vu)
+
+    def event_spread_min(self, values: jax.Array, edge, key: jax.Array | None = None) -> jax.Array:
+        """One asynchronous **min** event: both endpoints take the
+        coordinate-wise minimum over the live exchange — the event transport
+        of the leaderless size sketches."""
+        u, v, _, _, live = self._event_edge(edge, key)
+        x = jnp.asarray(values, jnp.float32)
+        return spread_min_pairwise(x, u, v, live)
+
     # ----------------------------------------------------- per-round weights
     def round_masks(self, key: jax.Array) -> tuple[jax.Array, jax.Array]:
         """Public alias of the per-round failure draws, for host-side
@@ -328,6 +405,32 @@ class CommPlan:
             data_sizes=self.data_sizes if data_sizes is None else data_sizes,
             failures=failures or self.failures,
         )
+
+
+def _event_tables(graph: Graph, sizes: np.ndarray | None) -> dict:
+    """Per-edge endpoint/weight tables of the event-driven rendering.
+
+    ``event_uv[e] = (u, v)`` in ``Graph.edge_list()`` order and
+    ``event_w[e] = (M[u, v], M[v, u])`` — the synchronous receive operator's
+    entries, so one event per edge composes to one synchronous round to
+    first order.  Padded to at least one row so a traced clamp-to-0 gather
+    stays in bounds on edgeless graphs.  Directed graphs get no tables
+    (a pairwise exchange has no orientation to respect).
+    """
+    if graph.directed:
+        return {}
+    edges = graph.edge_list()
+    if len(edges) == 0:
+        return dict(
+            event_uv=jnp.zeros((1, 2), jnp.int32),
+            event_w=jnp.zeros((1, 2), jnp.float32),
+        )
+    m = receive_matrix(graph, sizes)
+    u, v = edges[:, 0], edges[:, 1]
+    return dict(
+        event_uv=jnp.asarray(edges),
+        event_w=jnp.asarray(np.stack([m[u, v], m[v, u]], axis=1), jnp.float32),
+    )
 
 
 def _hyb_layout(
@@ -405,6 +508,7 @@ def compile_plan(
         failures=failures,
         data_sizes=None if sizes is None else sizes.copy(),
         n_edges=n_edges,
+        **_event_tables(graph, sizes),
     )
 
     if backend == "dense":

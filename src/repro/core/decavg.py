@@ -40,7 +40,6 @@ backends apply per-edge keep masks and renormalise via segment sums (see
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Sequence
 
 import jax
@@ -56,6 +55,9 @@ __all__ = [
     "mix_pytree_hyb",
     "mix_pytree_colored",
     "mix_pytree_circulant",
+    "mix_pytree_pairwise",
+    "spread_pairwise",
+    "spread_min_pairwise",
     "failure_receive_matrix",
     "link_failure_mask",
     "node_failure_mask",
@@ -214,6 +216,71 @@ def mix_pytree_colored(
         return acc.astype(x.dtype)
 
     return jax.tree_util.tree_map(mix_leaf_collective, params)
+
+
+def mix_pytree_pairwise(
+    params: PyTree,
+    u: jax.Array,
+    v: jax.Array,
+    w_uv: jax.Array,
+    w_vu: jax.Array,
+) -> PyTree:
+    """One event-driven pairwise DecAvg exchange on edge (u, v).
+
+    The asynchronous rendering of Eq. 2 (DESIGN.md §14): when edge (u, v)'s
+    Poisson clock fires, only its two endpoints move —
+
+        ``w_u ← w_u + w_uv·(w_v − w_u)``   and symmetrically for v.
+
+    ``u``/``v`` are traced int32 scalars; ``w_uv``/``w_vu`` traced float32
+    weights, normally the synchronous plan's receive entries ``M[u, v]`` /
+    ``M[v, u]`` so composing one event per edge reproduces the synchronous
+    round to first order in the weights (the rate-1 parity property).  A
+    masked event (dead edge, padding) passes ``w = 0`` and is the exact
+    identity.  fp32 blend for the same reason as ``mix_array``.
+    """
+
+    def mix_leaf(x: jax.Array) -> jax.Array:
+        xu, xv = x[u].astype(jnp.float32), x[v].astype(jnp.float32)
+        new_u = xu + w_uv * (xv - xu)
+        new_v = xv + w_vu * (xu - xv)
+        return x.at[u].set(new_u.astype(x.dtype)).at[v].set(new_v.astype(x.dtype))
+
+    return jax.tree_util.tree_map(mix_leaf, params)
+
+
+def spread_pairwise(
+    values: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    w_uv: jax.Array,
+    w_vu: jax.Array,
+) -> jax.Array:
+    """One event-driven **push** exchange on edge (u, v) — mass-conserving.
+
+    The asynchronous rendering of the send-form operator Mᵀ: u hands the
+    fraction ``w_uv = M[u, v]`` of its mass to v and receives ``w_vu·s_v``
+    back —
+
+        ``s_u ← s_u − w_uv·s_u + w_vu·s_v``   and symmetrically for v,
+
+    so ``s_u + s_v`` (hence the global sum) is invariant for *any* weights —
+    the property event-driven push-sum rides (``repro.gossip``).  Composing
+    one event per edge matches the synchronous ``CommPlan.spread`` to first
+    order, same as the mix form.  ``values``: (n,) or (n, k) float32.
+    """
+    xu, xv = values[u], values[v]
+    give_u, give_v = w_uv * xu, w_vu * xv
+    return values.at[u].set(xu - give_u + give_v).at[v].set(xv - give_v + give_u)
+
+
+def spread_min_pairwise(values: jax.Array, u: jax.Array, v: jax.Array, keep: jax.Array) -> jax.Array:
+    """One event-driven **min** exchange on edge (u, v): both endpoints take
+    the elementwise minimum (identity when ``keep`` is False) — the event
+    transport of the leaderless size sketches."""
+    xu, xv = values[u], values[v]
+    lo = jnp.minimum(xu, xv)
+    return values.at[u].set(jnp.where(keep, lo, xu)).at[v].set(jnp.where(keep, lo, xv))
 
 
 def mix_pytree_circulant(

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .mixing import mixing_matrix
+from .mixing import mixing_matrix, receive_matrix
 from .topology import Graph
 
 __all__ = [
@@ -37,6 +37,10 @@ __all__ = [
     "power_iteration_norm_reference",
     "min_spread_reference",
     "estimate_size_sketch_reference",
+    "event_mix_reference",
+    "event_spread_reference",
+    "event_spread_min_reference",
+    "push_sum_events_reference",
 ]
 
 
@@ -208,6 +212,110 @@ def estimate_size_sketch_reference(
         x = min_spread_reference(graph, x, ek, na)
     m = x.shape[1]
     return (m - 1) / np.maximum(x.sum(axis=1), 1e-300)
+
+
+def _event_weights(
+    graph: Graph,
+    edges_fired: np.ndarray,
+    keep: np.ndarray | None,
+    data_sizes: np.ndarray | None = None,
+):
+    """Shared prep of the event references: per-event (u, v, w_uv, w_vu).
+
+    Weights are the synchronous receive operator's entries ``M[u, v]`` /
+    ``M[v, u]`` — exactly the ``event_w`` table ``commplan.compile_plan``
+    bakes for ``CommPlan.event_mix``/``event_spread``, so device-vs-
+    reference parity is draw-exact given the same edge sequence (pass the
+    plan's ``data_sizes`` to replay a |D_j|-weighted plan).  ``keep`` (one
+    bool per event, or None = all live) replays the device's per-event
+    failure draws; a padding event (edge < 0) is skipped like the device's
+    zero-weight identity.
+    """
+    m = receive_matrix(graph, data_sizes)
+    edge_list = graph.edge_list()
+    fired = np.asarray(edges_fired, dtype=np.int64)
+    if keep is None:
+        keep = np.ones(len(fired), dtype=bool)
+    keep = np.asarray(keep, dtype=bool)
+    if len(keep) != len(fired):
+        raise ValueError(f"need one keep flag per event, got {len(keep)} for {len(fired)}")
+    for e, k in zip(fired, keep):
+        if e < 0 or not k:
+            continue
+        u, v = int(edge_list[e, 0]), int(edge_list[e, 1])
+        yield u, v, m[u, v], m[v, u]
+
+
+def event_mix_reference(
+    graph: Graph,
+    values: np.ndarray,
+    edges_fired: np.ndarray,
+    keep: np.ndarray | None = None,
+    data_sizes: np.ndarray | None = None,
+) -> np.ndarray:
+    """Replay a (time-ordered) event sequence of pairwise DecAvg exchanges:
+    ``w_u ← w_u + M[u,v]·(w_v − w_u)`` and symmetrically per event — the
+    numpy reference of ``CommPlan.event_mix`` scanned over an
+    ``EventStream`` (``values``: (n,) or (n, k))."""
+    x = np.asarray(values, dtype=np.float64).copy()
+    for u, v, w_uv, w_vu in _event_weights(graph, edges_fired, keep, data_sizes):
+        xu, xv = x[u].copy(), x[v].copy()
+        x[u] = xu + w_uv * (xv - xu)
+        x[v] = xv + w_vu * (xu - xv)
+    return x
+
+
+def event_spread_reference(
+    graph: Graph,
+    values: np.ndarray,
+    edges_fired: np.ndarray,
+    keep: np.ndarray | None = None,
+    data_sizes: np.ndarray | None = None,
+) -> np.ndarray:
+    """Replay pairwise **push** events: ``s_u ← s_u − M[u,v]·s_u + M[v,u]·s_v``
+    and symmetrically — mass-conserving event by event for any weights (the
+    reference of ``CommPlan.event_spread``)."""
+    x = np.asarray(values, dtype=np.float64).copy()
+    for u, v, w_uv, w_vu in _event_weights(graph, edges_fired, keep, data_sizes):
+        give_u, give_v = w_uv * x[u].copy(), w_vu * x[v].copy()
+        x[u] = x[u] - give_u + give_v
+        x[v] = x[v] - give_v + give_u
+    return x
+
+
+def event_spread_min_reference(
+    graph: Graph,
+    values: np.ndarray,
+    edges_fired: np.ndarray,
+    keep: np.ndarray | None = None,
+    data_sizes: np.ndarray | None = None,
+) -> np.ndarray:
+    """Replay pairwise **min** events: both endpoints take the coordinate-wise
+    minimum (reference of ``CommPlan.event_spread_min`` — the leaderless
+    sketch transport without barriers)."""
+    x = np.asarray(values, dtype=np.float64).copy()
+    for u, v, _, _ in _event_weights(graph, edges_fired, keep, data_sizes):
+        lo = np.minimum(x[u], x[v])
+        x[u] = lo
+        x[v] = lo.copy()
+    return x
+
+
+def push_sum_events_reference(
+    graph: Graph, values: np.ndarray, edges_fired: np.ndarray, keep: np.ndarray | None = None
+) -> np.ndarray:
+    """Event-driven push-sum reference: spread the (s, w) pair through the
+    same pairwise exchanges and return s/w — mass conservation per event
+    makes the ratio converge to the uniform average with no round barrier
+    (reference of ``repro.gossip.push_sum_events``)."""
+    s = np.asarray(values, dtype=np.float64)
+    squeeze = s.ndim == 1
+    if squeeze:
+        s = s[:, None]
+    payload = np.concatenate([s, np.ones((graph.n, 1))], axis=1)
+    out = event_spread_reference(graph, payload, edges_fired, keep)
+    ratio = out[:, :-1] / np.maximum(out[:, -1:], 1e-300)
+    return ratio[:, 0] if squeeze else ratio
 
 
 def estimate_size(graph: Graph, rounds: int, leader: int = 0) -> np.ndarray:

@@ -22,6 +22,7 @@ import numpy as np
 __all__ = [
     "Graph",
     "EdgeColoring",
+    "EventStream",
     "complete",
     "ring",
     "circulant",
@@ -34,6 +35,7 @@ __all__ = [
     "star",
     "from_adjacency",
     "churn_sequence",
+    "poisson_event_stream",
 ]
 
 
@@ -387,6 +389,120 @@ def star(n: int) -> Graph:
     a[0, 1:] = 1.0
     a[1:, 0] = 1.0
     return Graph(a, name=f"star-{n}")
+
+
+@dataclasses.dataclass(frozen=True)
+class EventStream:
+    """A realised asynchronous gossip schedule: sorted (time, edge) events.
+
+    The coordination-free setting has no global round barrier — each edge
+    carries an independent Poisson clock and the pair it joins exchanges
+    whenever the clock fires (Boyd-style randomised gossip; Valerio et al.'s
+    uncoordinated DFL).  Like ``churn_sequence``, the stochastic process is
+    realised **host-side** (seeded, deterministic) into static device-shaped
+    tensors so the executor can ``lax.scan`` over events without host
+    round-trips:
+
+    ``times``  (E,) float32, non-decreasing; padding entries hold ``horizon``.
+    ``edges``  (E,) int32 indices into ``Graph.edge_list()``; padding is -1,
+               which every event operator treats as the identity — the
+               static *envelope* that lets streams of different realised
+               lengths share one compiled program (sweeps, budget masking).
+    ``n_events``  live events (≤ E).
+    ``rates``  (m,) per-edge clock rates the stream was drawn from.
+    """
+
+    times: np.ndarray  # (E,) float32 sorted, padded with `horizon`
+    edges: np.ndarray  # (E,) int32 edge ids, padded with -1
+    n_events: int
+    horizon: float
+    rates: np.ndarray  # (m,) float64
+
+    def __post_init__(self):
+        if self.times.shape != self.edges.shape or self.times.ndim != 1:
+            raise ValueError(
+                f"times/edges must be matching 1-D arrays, got "
+                f"{self.times.shape} vs {self.edges.shape}"
+            )
+        if self.n_events > len(self.times):
+            raise ValueError("n_events exceeds the padded envelope")
+
+    @property
+    def envelope(self) -> int:
+        return len(self.times)
+
+    @property
+    def messages_per_event(self) -> int:
+        """A pairwise exchange moves one model in each direction."""
+        return 2
+
+
+def poisson_event_stream(
+    graph: Graph,
+    horizon: float,
+    rate: float | np.ndarray = 1.0,
+    seed: int = 0,
+    envelope: int | None = None,
+) -> EventStream:
+    """Sample per-edge Poisson clocks into a sorted, padded event stream.
+
+    ``rate`` is the clock intensity: a scalar (every edge fires at that
+    rate), an (m,) per-edge vector in ``Graph.edge_list()`` order, or an
+    (n, n) symmetric rate matrix read off at the edge positions.  Each edge
+    fires ``Poisson(rate_e · horizon)`` times at iid Uniform(0, horizon)
+    instants (equivalent to exponential inter-arrivals, but vectorises);
+    the merged stream is time-sorted with ties broken by edge id, so the
+    realisation is a pure function of ``seed``.
+
+    ``rate = 1`` with ``horizon = R`` matches R synchronous rounds in
+    expected per-edge traffic: one exchange per edge per unit time — the
+    budget-matched comparison ``benchmarks/fig9_async.py`` draws.
+
+    ``envelope``, when given, pads (or rejects: the realised count must fit)
+    to a static length so different seeds/rates share one compiled scan.
+    """
+    if graph.directed:
+        raise ValueError("poisson_event_stream needs an undirected graph (pairwise exchanges)")
+    if horizon <= 0:
+        raise ValueError(f"horizon must be positive, got {horizon}")
+    edges = graph.edge_list()
+    m = len(edges)
+    r = np.asarray(rate, dtype=np.float64)
+    if r.ndim == 0:
+        rates = np.full(m, float(r))
+    elif r.ndim == 1:
+        if r.shape[0] != m:
+            raise ValueError(f"per-edge rates need shape ({m},), got {r.shape}")
+        rates = r.copy()
+    elif r.shape == (graph.n, graph.n):
+        if not np.allclose(r, r.T):
+            raise ValueError("rate matrix must be symmetric (one clock per undirected edge)")
+        rates = r[edges[:, 0], edges[:, 1]].astype(np.float64)
+    else:
+        raise ValueError(f"rate must be scalar, ({m},) or ({graph.n}, {graph.n}), got {r.shape}")
+    if np.any(rates < 0):
+        raise ValueError("edge clock rates must be non-negative")
+    rng = np.random.default_rng(seed)
+    counts = rng.poisson(rates * horizon)
+    edge_ids = np.repeat(np.arange(m, dtype=np.int32), counts)
+    times = rng.uniform(0.0, horizon, size=int(counts.sum()))
+    order = np.lexsort((edge_ids, times))
+    times, edge_ids = times[order], edge_ids[order]
+    n_events = len(times)
+    width = n_events if envelope is None else int(envelope)
+    if width < n_events:
+        raise ValueError(
+            f"envelope {width} too small for the realised stream ({n_events} events) — "
+            f"size it like a Poisson tail, e.g. ceil(Σrate·T + 4·sqrt(Σrate·T))"
+        )
+    pad = width - n_events
+    return EventStream(
+        times=np.concatenate([times, np.full(pad, horizon)]).astype(np.float32),
+        edges=np.concatenate([edge_ids, np.full(pad, -1, np.int32)]).astype(np.int32),
+        n_events=n_events,
+        horizon=float(horizon),
+        rates=rates,
+    )
 
 
 def churn_sequence(

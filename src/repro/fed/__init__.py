@@ -1,6 +1,7 @@
 """Decentralised federated runtime: vectorised node-ensemble trainer + serving."""
 from .executor import (
     TrajectoryConfig,
+    run_event_trajectory,
     run_sweep,
     run_trajectory,
     run_warmup_sweep,

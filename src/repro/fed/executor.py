@@ -31,19 +31,24 @@ bit-exact (same PRNG stream, same batch order, same round body).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .trainer import DFLState, init_fl_state, sigma_metrics
+from repro.core.commplan import CommPlan, compile_plan
+from repro.core.topology import EventStream, Graph
+
+from .trainer import DFLState, _local_steps, init_fl_state, sigma_metrics
 
 PyTree = Any
 
 __all__ = [
     "TrajectoryConfig",
     "run_trajectory",
+    "run_event_trajectory",
     "run_warmup_trajectory",
     "run_warmup_sweep",
     "run_sweep",
@@ -272,6 +277,192 @@ def run_trajectory(
     state, cols = _drive_chunks(chunk_fn, state, sched_d, cfg.eval_mask(), cfg, donate=donate)
     hist = _assemble_history(cfg.eval_mask(), cols, eval_fn is not None, track_sigmas)
     return state, hist
+
+
+def run_event_trajectory(
+    state: DFLState,
+    loss_fn,
+    optimizer,
+    plan: CommPlan | Graph,
+    stream: EventStream,
+    xs: np.ndarray,
+    ys: np.ndarray,
+    schedule: np.ndarray,
+    *,
+    b_local: int,
+    n_bins: int = 20,
+    eval_fn=None,
+    eval_batch=None,
+    reinit_opt: bool = True,
+) -> tuple[DFLState, dict[str, list], dict[str, np.ndarray]]:
+    """Event-driven (asynchronous) DFL trajectory: no global round barrier.
+
+    The coordination-free rendering of the round loop (DESIGN.md §14): the
+    ``EventStream``'s per-edge Poisson clocks replace the synchronous
+    barrier, and one ``lax.scan`` over the (time, edge) envelope runs, per
+    event,
+
+      1. a **local phase** — each endpoint takes ``b_local`` minibatch
+         steps from its own cursor into the shared gather ``schedule``
+         (wrapped modulo its length, so nodes never exhaust it);
+      2. the **pairwise DecAvg exchange** ``CommPlan.event_mix`` (per-event
+         failure draws keyed ``fold_in(rng, event_index)``; a failed draw
+         moves no model and spends no messages, but the endpoints still
+         trained — synchronous failed-link semantics);
+      3. the pairwise analogue of Algorithm 1 line 15 — the two
+         participants' optimizer states re-initialise.
+
+    Per-node **virtual clocks** track each node's last participation time;
+    an event's *staleness* is ``t − clock`` at its endpoints — how long the
+    pair's models idled since they last moved.  Padding events (edge = -1)
+    are the exact identity, so streams of different realised lengths share
+    one compiled program.
+
+    Metrics are bucketed into ``n_bins`` equal **wall-time bins** over
+    ``stream.horizon`` (per-bin mean train loss / staleness / event and
+    message counts; ``eval_fn`` runs once at each bin's last live event), so
+    the history plots on the same axes as the synchronous fig1-style curves
+    — bin b of a rate-1 stream is the budget-matched peer of synchronous
+    round ``b · horizon / n_bins`` in transmitted messages.  Note the local
+    phase is event-*triggered*: per unit time a node takes ``degree × b``
+    local steps (vs ``b`` per synchronous round), which is why fig9 compares
+    convergence per transmitted message, not per local step.
+
+    Semantics knobs mirror ``make_round_fn``; ``plan`` may be a ``Graph``
+    (compiled with the auto backend).  Returns ``(final_state, history,
+    aux)`` with ``aux`` the per-node clocks/event counts.
+    """
+    plan = compile_plan(plan) if isinstance(plan, Graph) else plan
+    if plan.event_uv is None:
+        raise ValueError("run_event_trajectory needs an undirected, statically compiled plan")
+    n_nodes = xs.shape[0]
+    if plan.n != n_nodes:
+        raise ValueError(f"plan has {plan.n} nodes but xs carries {n_nodes}")
+    s = np.asarray(schedule)
+    n_sched_rounds = (s.shape[0] // b_local) if s.ndim == 3 else s.shape[0]
+    sched_d = jnp.asarray(_as_round_schedule(s, n_sched_rounds, b_local))
+    xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
+    eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
+
+    # ---- static host realisation of the stream's metric structure --------
+    env = stream.envelope
+    live_np = stream.edges >= 0
+    bins_np = np.clip(
+        (stream.times / stream.horizon * n_bins).astype(np.int64), 0, n_bins - 1
+    )
+    do_eval_np = np.zeros(env, dtype=bool)
+    if eval_fn is not None:
+        for b in range(n_bins):
+            hits = np.nonzero(live_np & (bins_np == b))[0]
+            if len(hits):
+                do_eval_np[hits[-1]] = True
+
+    ep = plan.event_uv
+    failures_active = plan.failures.active
+    rng, base_key = jax.random.split(state.rng)
+
+    def body(carry, inp):
+        params, opt_state, counts, clocks, acc = carry
+        i, e, t, b, do_ev = inp
+        liv = e >= 0
+        livf = liv.astype(jnp.float32)
+        uv = ep[jnp.maximum(e, 0)]  # (2,) endpoints (padding reads edge 0, masked below)
+
+        # 1. local phase: both endpoints catch up by b_local minibatch steps
+        cur = counts[uv] % n_sched_rounds
+        idx = sched_d[cur, uv]  # (2, b, bs)
+        batch = (xs_d[uv[:, None, None], idx], ys_d[uv[:, None, None], idx])
+        pair_p = jax.tree_util.tree_map(lambda l: l[uv], params)
+        pair_o = jax.tree_util.tree_map(lambda l: l[uv], opt_state)
+        new_p, new_o, loss_pair = jax.vmap(partial(_local_steps, loss_fn, optimizer))(
+            pair_p, pair_o, batch
+        )
+        new_p = jax.tree_util.tree_map(lambda a, old: jnp.where(liv, a, old), new_p, pair_p)
+        new_o = jax.tree_util.tree_map(lambda a, old: jnp.where(liv, a, old), new_o, pair_o)
+        params = jax.tree_util.tree_map(lambda l, nl: l.at[uv].set(nl), params, new_p)
+        opt_state = jax.tree_util.tree_map(lambda l, nl: l.at[uv].set(nl), opt_state, new_o)
+
+        # 2. pairwise exchange (failure draws keyed per event).  event_keep
+        # here consumes the same key event_mix folds internally, so the
+        # executor's bookkeeping sees exactly the draw that masked the
+        # exchange: a failed exchange moves no model (and counts no
+        # messages below), but the endpoints did wake and train.
+        k = jax.random.fold_in(base_key, i) if failures_active else None
+        delivered = (liv & plan.event_keep(k)) if failures_active else liv
+        params = plan.event_mix(params, e, k)
+
+        # 3. pairwise optimizer-state reinit (Algorithm 1 line 15)
+        if reinit_opt:
+            pair_after = jax.tree_util.tree_map(lambda l: l[uv], params)
+            fresh = jax.vmap(optimizer.init)(pair_after)
+            kept = jax.tree_util.tree_map(lambda l: l[uv], opt_state)
+            fresh = jax.tree_util.tree_map(
+                lambda a, old: jnp.where(liv, a, old), fresh, kept
+            )
+            opt_state = jax.tree_util.tree_map(
+                lambda l, nl: l.at[uv].set(nl), opt_state, fresh
+            )
+
+        # 4. virtual clocks, staleness, per-bin metric accumulation
+        stale = (t - clocks[uv]).mean()
+        clocks = clocks.at[uv].set(jnp.where(liv, t, clocks[uv]))
+        counts = counts.at[uv].add(jnp.where(liv, 1, 0))
+        loss_sum, cnt, stale_sum, msg_cnt, test_bin = acc
+        loss_sum = loss_sum.at[b].add(loss_pair.mean() * livf)
+        stale_sum = stale_sum.at[b].add(stale * livf)
+        cnt = cnt.at[b].add(livf)
+        msg_cnt = msg_cnt.at[b].add(2.0 * delivered.astype(jnp.float32))
+        if eval_fn is not None:
+            test_bin = jax.lax.cond(
+                do_ev,
+                lambda tb: tb.at[b].set(jnp.mean(eval_fn(params, eval_d)).astype(jnp.float32)),
+                lambda tb: tb,
+                test_bin,
+            )
+        acc = (loss_sum, cnt, stale_sum, msg_cnt, test_bin)
+        return (params, opt_state, counts, clocks, acc), None
+
+    @jax.jit
+    def drive(params, opt_state):
+        counts = jnp.zeros(n_nodes, jnp.int32)
+        clocks = jnp.zeros(n_nodes, jnp.float32)
+        zeros = jnp.zeros(n_bins, jnp.float32)
+        acc0 = (zeros, zeros, zeros, zeros, jnp.full(n_bins, jnp.nan, jnp.float32))
+        inp = (
+            jnp.arange(env, dtype=jnp.int32),
+            jnp.asarray(stream.edges),
+            jnp.asarray(stream.times),
+            jnp.asarray(bins_np, jnp.int32),
+            jnp.asarray(do_eval_np),
+        )
+        carry, _ = jax.lax.scan(body, (params, opt_state, counts, clocks, acc0), inp)
+        return carry
+
+    params, opt_state, counts, clocks, (loss_sum, cnt, stale_sum, msg_cnt, test_bin) = drive(
+        state.params, state.opt_state
+    )
+    cnt_np = np.asarray(cnt)
+    safe = np.maximum(cnt_np, 1.0)
+    width = stream.horizon / n_bins
+    hist = {
+        "bin": list(range(n_bins)),
+        "time": [float((b + 1) * width) for b in range(n_bins)],
+        "train_loss": [float(v) for v in np.asarray(loss_sum) / safe],
+        "test_loss": [float(v) for v in np.asarray(test_bin)],
+        "staleness": [float(v) for v in np.asarray(stale_sum) / safe],
+        "events": [int(v) for v in cnt_np],
+        # delivered messages only: an exchange the failure draw killed moved
+        # no model, so it spends none of the budget fig9 normalises by
+        "messages": [int(v) for v in np.asarray(msg_cnt)],
+    }
+    final = DFLState(
+        params=params,
+        opt_state=opt_state,
+        round=state.round + jnp.int32(stream.n_events),
+        rng=rng,
+    )
+    aux = {"node_clock": np.asarray(clocks), "node_events": np.asarray(counts)}
+    return final, hist, aux
 
 
 def run_warmup_trajectory(

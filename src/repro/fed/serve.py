@@ -8,7 +8,6 @@ prefill + batched autoregressive decode.  These are the functions the
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

@@ -27,7 +27,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.commplan import CommPlan, FailureModel, PlanSchedule, compile_plan
-from repro.core.initialisation import InitConfig
 from repro.core.topology import Graph
 from repro.optim import Optimizer
 

@@ -22,11 +22,14 @@ from .engine import (
     estimate_mean_degree,
     estimate_size,
     estimate_size_leaderless,
+    estimate_size_leaderless_events,
     gain_from_degree_sample,
     gains_from_estimates,
     make_gain_estimator,
     power_iteration_norm,
     push_sum,
+    push_sum_events,
+    spread_events,
     spread_rounds,
 )
 from .walker import poll_degrees_device
@@ -39,6 +42,7 @@ __all__ = [
     "estimate_mean_degree",
     "estimate_size",
     "estimate_size_leaderless",
+    "estimate_size_leaderless_events",
     "fit_contraction_rate",
     "gain_from_degree_sample",
     "gains_from_estimates",
@@ -47,7 +51,9 @@ __all__ = [
     "power_iteration_norm",
     "predicted_contraction_rate",
     "push_sum",
+    "push_sum_events",
     "relative_error_trace",
     "size_error_trace",
+    "spread_events",
     "spread_rounds",
 ]

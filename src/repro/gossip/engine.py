@@ -44,7 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.commplan import CommPlan, PlanSchedule, compile_plan, compile_schedule
-from repro.core.topology import Graph
+from repro.core.topology import EventStream, Graph
 
 from .walker import poll_degrees_device
 
@@ -61,6 +61,9 @@ __all__ = [
     "gains_from_estimates",
     "gain_from_degree_sample",
     "make_gain_estimator",
+    "spread_events",
+    "push_sum_events",
+    "estimate_size_leaderless_events",
 ]
 
 Plan = CommPlan | PlanSchedule
@@ -266,6 +269,99 @@ def _sketch_n_hat(plan, sketches, rounds, key, round_offset=0, active=None):
     mins = _scan_spread_min(plan, sketches, rounds, key, round_offset, active)
     m = sketches.shape[1]
     return (m - 1) / jnp.maximum(mins.sum(axis=1), _EPS), mins
+
+
+# ------------------------------------------------- event-driven (barrier-free)
+def _scan_events(plan: Plan | Graph, op: str, x0: jax.Array, stream: EventStream, key):
+    """``stream.envelope`` × ``plan.event_<op>`` as one ``lax.scan``; the
+    per-event failure key is ``fold_in(key, event_index)`` — the event
+    analogue of the per-round ``fold_in`` discipline, so a host reference
+    given the realised keep flags replays the exact sequence.  Padding
+    events (edge = -1) are the identity, which is what lets streams of
+    different realised lengths share one compiled program."""
+    plan = as_plan(plan)
+    if isinstance(plan, PlanSchedule):
+        if plan.k == 1:
+            # the K = 1 contract: a size-1 schedule IS the static plan
+            plan = plan.plans[0]
+        else:
+            raise ValueError(
+                "event-driven gossip runs on a static CommPlan — realise the "
+                "dynamic graph into per-edge rates instead of a PlanSchedule"
+            )
+    if plan.failures.active and key is None:
+        raise ValueError("failure model active: event gossip needs a PRNG key")
+    edges = jnp.asarray(stream.edges)
+
+    def body(x, inp):
+        i, e = inp
+        k = None if key is None else jax.random.fold_in(key, i)
+        return getattr(plan, f"event_{op}")(x, e, k), None
+
+    idx = jnp.arange(stream.envelope, dtype=jnp.int32)
+    x, _ = jax.lax.scan(body, jnp.asarray(x0, jnp.float32), (idx, edges))
+    return x
+
+
+def spread_events(
+    plan: Plan | Graph,
+    values: jax.Array,
+    stream: EventStream,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Apply an ``EventStream`` of pairwise push exchanges to an (n,) / (n, k)
+    payload — the barrier-free rendering of ``spread_rounds``: mass is
+    conserved event by event, no global round counter exists, and estimation
+    progresses exactly as fast as the Poisson clocks fire."""
+    return _scan_events(plan, "spread", values, stream, key)
+
+
+def push_sum_events(
+    plan: Plan | Graph,
+    values: jax.Array,
+    stream: EventStream,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Event-driven Kempe push-sum: (s, w) ride the same pairwise exchanges,
+    s/w is every node's running average estimate — uncoordinated consensus
+    with no synchronisation barrier (numpy reference:
+    ``core.gossip.push_sum_events_reference``)."""
+    plan = as_plan(plan)
+    x = jnp.asarray(values, jnp.float32)
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    payload = jnp.concatenate([x, jnp.ones((x.shape[0], 1), jnp.float32)], axis=1)
+    out = _scan_events(plan, "spread", payload, stream, key)
+    ratio = out[:, :-1] / jnp.maximum(out[:, -1:], _EPS)
+    return ratio[:, 0] if squeeze else ratio
+
+
+def estimate_size_leaderless_events(
+    plan: Plan | Graph,
+    stream: EventStream,
+    key: jax.Array,
+    *,
+    n_sketches: int = 32,
+    return_sketches: bool = False,
+):
+    """Leaderless n̂ over an event stream — fully uncoordinated estimation:
+    no distinguished node *and* no round barrier.  Each node's Exp(1)
+    sketches flood by pairwise min exchanges as edge clocks fire
+    (``CommPlan.event_spread_min``); the estimator and its failure mode
+    (unreached nodes degrade to n̂ ≈ 1 → gain ≈ 1) match
+    ``estimate_size_leaderless`` sketch for sketch."""
+    plan = as_plan(plan)
+    if key is None:
+        raise ValueError("estimate_size_leaderless_events draws sketches: a PRNG key is required")
+    k_draw, k_event = jax.random.split(key)
+    sketches = jax.random.exponential(k_draw, (plan.n, n_sketches))
+    mins = _scan_events(
+        plan, "spread_min", sketches, stream,
+        k_event if plan.failures.active else None,
+    )
+    n_hat = (n_sketches - 1) / jnp.maximum(mins.sum(axis=1), _EPS)
+    return (n_hat, mins) if return_sketches else n_hat
 
 
 def estimate_mean_degree(

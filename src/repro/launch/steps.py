@@ -29,8 +29,7 @@ Serving = consensus model; decode is ONE token against a cache of seq_len.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

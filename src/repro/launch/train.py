@@ -16,6 +16,10 @@ Examples:
     # PlanSchedule (operators switch by round index inside the fused scan)
     python -m repro.launch.train --model mlp --topology kregular --topology-schedule churn \
         --plans 8 --churn-rate 0.2 --uncoordinated-init --leaderless
+    # event-driven (no round barrier): per-edge Poisson clocks, pairwise
+    # DecAvg exchanges scanned over the realised event stream
+    python -m repro.launch.train --model mlp --topology ba --async --event-rate 1.0 \
+        --event-horizon 100
 """
 from __future__ import annotations
 
@@ -47,11 +51,16 @@ from repro.fed import (
     init_fl_state,
     make_eval_fn,
     make_round_fn,
+    run_event_trajectory,
     run_trajectory,
     run_warmup_trajectory,
     train_loop,
 )
-from repro.gossip import make_gain_estimator
+from repro.gossip import (
+    estimate_size_leaderless_events,
+    gains_from_estimates,
+    make_gain_estimator,
+)
 from repro.models import transformer as TF
 from repro.models.paper_models import classifier_loss, cnn_forward, init_cnn, init_mlp, init_vgg16, mlp_forward, vgg16_forward
 from repro.optim import adamw, sgd
@@ -115,6 +124,17 @@ def main() -> None:
         "of the leader one-hot — no distinguished node",
     )
     p.add_argument(
+        "--async", action="store_true", dest="async_gossip",
+        help="event-driven gossip: no global round barrier — per-edge Poisson "
+        "clocks realise an event stream and training/mixing happen pairwise "
+        "as edges fire (fed.executor.run_event_trajectory, DESIGN.md §14)",
+    )
+    p.add_argument("--event-rate", type=float, default=1.0,
+                   help="per-edge Poisson clock rate; 1.0 message-budget-matches "
+                   "one synchronous round per unit time")
+    p.add_argument("--event-horizon", type=float, default=None,
+                   help="virtual-time horizon of the event stream (default: --rounds)")
+    p.add_argument(
         "--legacy-loop", action="store_true",
         help="per-round dispatch via train_loop instead of the fused executor",
     )
@@ -126,6 +146,16 @@ def main() -> None:
     if args.uncoordinated_init and args.no_gain_correction:
         p.error("--uncoordinated-init estimates (and applies) per-node gains; "
                 "it contradicts --no-gain-correction — pick one")
+    if args.async_gossip:
+        if args.arch or args.legacy_loop:
+            p.error("--async runs through the event executor — it excludes --arch and --legacy-loop")
+        if args.topology_schedule != "static":
+            p.error("--async needs a static topology: realise dynamics as per-edge "
+                    "clock rates (poisson_event_stream) rather than a PlanSchedule")
+        if args.uncoordinated_init and args.estimate_mode == "degree":
+            p.error("--async estimation is barrier-free leaderless sketching; "
+                    "degree polling needs the round-based walker — drop "
+                    "--estimate-mode degree or drop --async")
 
     n = args.nodes
     graph = build_graph(args.topology, n, args.seed)
@@ -206,10 +236,19 @@ def main() -> None:
     init_one = init_with(icfg)
     init_one_g = lambda k, gn: init_with(icfg.replace(gain=gn))(k)
     key = jax.random.PRNGKey(args.seed)
-    round_fn = make_round_fn(loss_fn, opt, mix_plan, link_p=args.link_p, node_p=args.node_p)
+    # the async branch mixes pairwise through its own plan — don't compile a
+    # round function (and its O(n²) dense operator) it would never call
+    round_fn = (
+        None
+        if args.async_gossip
+        else make_round_fn(loss_fn, opt, mix_plan, link_p=args.link_p, node_p=args.node_p)
+    )
     eval_every = max(1, args.rounds // 20)
     estimate_fn = None
-    if args.uncoordinated_init:
+    if args.uncoordinated_init and not args.async_gossip:
+        # the async branch estimates with barrier-free leaderless sketches
+        # over its own event stream instead (below) — don't build (and
+        # compile) a round-based estimator it would never call
         # estimation rides the same links — and the same failure model — as
         # the training rounds (unit-weight plan: Eq. 3 send operator); over a
         # topology schedule the gossip itself follows the dynamic graph
@@ -224,7 +263,54 @@ def main() -> None:
             est_plan, pi_rounds=args.estimate_rounds, ps_rounds=args.estimate_rounds,
             mode=args.estimate_mode, leaderless=args.leaderless,
         )
-    if args.arch or args.legacy_loop:
+    if args.async_gossip:
+        # ---- event-driven path: no round barrier, no estimation barrier ----
+        horizon = args.event_horizon if args.event_horizon is not None else float(args.rounds)
+        fm = FailureModel(link_p=args.link_p, node_p=args.node_p)
+        plan = compile_plan(graph, failures=fm)
+        stream = T.poisson_event_stream(
+            graph, horizon=horizon, rate=args.event_rate, seed=args.seed + 2
+        )
+        print(
+            f"event stream: {stream.n_events} events over horizon {horizon:g} "
+            f"(rate {args.event_rate:g}, {2 * stream.n_events} messages)"
+        )
+        sched = batch_index_schedule(
+            ys.shape[1], n, args.batch_size,
+            max(int(horizon), 1) * args.local_batches, seed=args.seed,
+        )
+        if args.uncoordinated_init:
+            # estimation is barrier-free too: leaderless sketches over their
+            # own Poisson stream (--estimate-rounds units of virtual time).
+            # --estimate-mode vnorm/alpha and --leaderless don't apply here:
+            # the event path always sketches (no leader, no phase counter)
+            # and gains are n̂^0.5 — the §4.4 size-only knowledge regime
+            est_stream = T.poisson_event_stream(
+                graph, horizon=float(args.estimate_rounds), rate=args.event_rate,
+                seed=args.seed + 3,
+            )
+            k_est, key = jax.random.split(key)
+            n_hat = estimate_size_leaderless_events(plan, est_stream, k_est)
+            gains = np.asarray(jax.jit(gains_from_estimates)(n_hat))
+            print(
+                f"barrier-free leaderless gains (n̂^0.5): mean={gains.mean():.2f} "
+                f"min={gains.min():.2f} max={gains.max():.2f}"
+            )
+            state = init_fl_state(key, n, init_one_g, opt, gains=gains)
+        else:
+            state = init_fl_state(key, n, init_one, opt)
+        state, hist, _aux = run_event_trajectory(
+            state, loss_fn, opt, plan, stream, xs, ys, sched,
+            b_local=args.local_batches, n_bins=20, eval_fn=eval_fn,
+            eval_batch=eval_batch,
+        )
+        for i, t in enumerate(hist["time"]):
+            print(
+                f"t={t:8.1f} train {hist['train_loss'][i]:.4f} "
+                f"test {hist['test_loss'][i]:.4f} stale {hist['staleness'][i]:.2f} "
+                f"msgs {hist['messages'][i]}", flush=True,
+            )
+    elif args.arch or args.legacy_loop:
         # token streams sample per-batch windows (no gather schedule yet), so
         # the arch path stays on the host-driven loop
         if estimate_fn is None:

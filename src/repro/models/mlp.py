@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.initialisation import InitConfig
-from .common import ACTIVATIONS, KeyGen, dense_init
+from .common import KeyGen, dense_init
 
 PyTree = Any
 

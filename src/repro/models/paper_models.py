@@ -10,7 +10,6 @@ models Figures 1–4, 6, 7 are made with.
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Sequence
 
 import jax

@@ -1,11 +1,9 @@
 """Per-architecture smoke tests (deliverable f): a REDUCED variant of each
 assigned family runs one forward AND one train step on CPU; output shapes
 asserted, no NaNs anywhere."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config, get_reduced_config, list_archs

@@ -1,0 +1,352 @@
+"""Event-driven (asynchronous) gossip: the barrier-free path (DESIGN.md §14).
+
+Property tests for the Poisson event envelope, the pairwise event operators
+(`CommPlan.event_mix` / `event_spread` / `event_spread_min`), the engine's
+event protocols against the numpy event references in `core.gossip`, and
+the event executor's virtual-clock / staleness bookkeeping.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gossip as G
+from repro.core import topology as T
+from repro.core.commplan import FailureModel, compile_plan, compile_schedule
+from repro.gossip import (
+    estimate_size_leaderless_events,
+    push_sum_events,
+    spread_events,
+)
+
+BACKENDS = ("dense", "sparse", "ppermute")
+
+
+def _graphs():
+    return [
+        T.ring(12),
+        T.random_k_regular(12, 4, seed=0),
+        T.barabasi_albert(16, 3, seed=1),
+    ]
+
+
+# ---------------------------------------------------------------- sampler
+def test_poisson_stream_deterministic_under_seed_reuse():
+    g = T.random_k_regular(16, 4, seed=0)
+    a = T.poisson_event_stream(g, horizon=10.0, rate=1.0, seed=3)
+    b = T.poisson_event_stream(g, horizon=10.0, rate=1.0, seed=3)
+    assert a.n_events == b.n_events
+    assert np.array_equal(a.edges, b.edges)
+    assert np.array_equal(a.times, b.times)
+    c = T.poisson_event_stream(g, horizon=10.0, rate=1.0, seed=4)
+    assert not np.array_equal(a.edges, c.edges)
+
+
+def test_poisson_stream_sorted_padded_and_scaled():
+    g = T.ring(10)
+    m = g.n_edges
+    s = T.poisson_event_stream(g, horizon=50.0, rate=1.0, seed=0, envelope=1000)
+    assert s.envelope == 1000
+    live, pad = s.edges[: s.n_events], s.edges[s.n_events :]
+    assert np.all(np.diff(s.times[: s.n_events]) >= 0)
+    assert np.all(pad == -1) and np.all(s.times[s.n_events :] == s.horizon)
+    assert np.all((live >= 0) & (live < m))
+    # counts concentrate around rate·horizon per edge (5σ across the pool)
+    lam = m * 50.0
+    assert abs(s.n_events - lam) < 5 * np.sqrt(lam)
+    # rate forms: per-edge vector and symmetric rate matrix
+    sv = T.poisson_event_stream(g, horizon=5.0, rate=np.full(m, 2.0), seed=1)
+    sm = T.poisson_event_stream(g, horizon=5.0, rate=2.0 * g.adjacency, seed=1)
+    assert sv.n_events == sm.n_events and np.array_equal(sv.edges, sm.edges)
+
+
+def test_poisson_stream_rejects_bad_input():
+    g = T.ring(8)
+    with pytest.raises(ValueError, match="envelope"):
+        T.poisson_event_stream(g, horizon=50.0, rate=4.0, seed=0, envelope=3)
+    with pytest.raises(ValueError, match="horizon"):
+        T.poisson_event_stream(g, horizon=0.0)
+    with pytest.raises(ValueError, match="non-negative"):
+        T.poisson_event_stream(g, horizon=1.0, rate=np.full(g.n_edges, -1.0))
+    directed = T.Graph(np.triu(np.ones((4, 4), np.float32), 1), name="dag", directed=True)
+    with pytest.raises(ValueError, match="undirected"):
+        T.poisson_event_stream(directed, horizon=1.0)
+
+
+# ------------------------------------------------- operator parity properties
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_event_generator_matches_sync_operator_in_expectation(backend):
+    """One event per edge per unit time, linearised: the single-event
+    generators sum to the synchronous operator EXACTLY (Σ_e B_e = M − I),
+    i.e. Σ_e event_mix(x, e) − (m−1)·x == mix(x) — the rate-1 parity."""
+    for g in _graphs():
+        plan = compile_plan(g, backend=backend)
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(g.n, 3)), jnp.float32)
+        acc = sum(plan.event_mix(x, e) for e in range(plan.n_edges))
+        lhs = acc - (plan.n_edges - 1) * x
+        np.testing.assert_allclose(lhs, plan.mix(x), atol=1e-4)
+        accs = sum(plan.event_spread(x, e) for e in range(plan.n_edges))
+        lhs_s = accs - (plan.n_edges - 1) * x
+        np.testing.assert_allclose(lhs_s, plan.spread(x), atol=1e-4)
+
+
+def test_event_sweep_approximates_one_round():
+    """Composing one event per edge ≈ one synchronous round: the realised
+    sweep operator is row-stochastic with the consensus fixed point exact,
+    and contracts disagreement within a small factor of `mix`."""
+    for g in _graphs():
+        plan = compile_plan(g, backend="dense")
+        ident = jnp.eye(g.n)
+        sweep = ident
+        for e in range(plan.n_edges):
+            sweep = plan.event_mix(sweep, e)
+        m_ev = np.asarray(sweep)
+        np.testing.assert_allclose(m_ev.sum(axis=1), 1.0, atol=1e-5)
+        x = np.random.default_rng(1).normal(size=g.n)
+        dis = lambda v: np.linalg.norm(v - v.mean())
+        r_event = dis(m_ev @ x) / dis(x)
+        r_sync = dis(np.asarray(plan.receive) @ x) / dis(x)
+        assert 0.3 < r_event / r_sync < 3.0, (g.name, r_event, r_sync)
+        # consensus is a fixed point, exactly
+        ones = jnp.ones(g.n)
+        np.testing.assert_allclose(np.asarray(plan.event_mix(ones, 0)), 1.0, atol=1e-6)
+
+
+def test_event_ops_identical_across_backends():
+    g = T.barabasi_albert(14, 3, seed=2)
+    plans = [compile_plan(g, backend=b) for b in BACKENDS]
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(g.n, 2)), jnp.float32)
+    for e in [-1, 0, g.n_edges - 1]:
+        outs = [np.asarray(p.event_mix(x, e)) for p in plans]
+        for o in outs[1:]:
+            np.testing.assert_array_equal(outs[0], o)
+        outs = [np.asarray(p.event_spread(x, e)) for p in plans]
+        for o in outs[1:]:
+            np.testing.assert_array_equal(outs[0], o)
+
+
+def test_event_padding_is_identity_and_mass_conserved():
+    g = T.random_k_regular(12, 4, seed=1)
+    plan = compile_plan(g)
+    x = jnp.asarray(np.random.default_rng(3).normal(size=g.n), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(plan.event_mix(x, -1)), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(plan.event_spread(x, -1)), np.asarray(x))
+    for e in range(plan.n_edges):
+        x = plan.event_spread(x, e)
+    assert abs(float(x.sum()) - float(jnp.asarray(np.random.default_rng(3).normal(size=g.n), jnp.float32).sum())) < 1e-4
+
+
+def test_schedule_views_have_no_event_tables():
+    graphs = T.churn_sequence(T.random_k_regular(12, 4, seed=0), 2, 0.2, seed=1)
+    sched = compile_schedule(graphs, backend="dense")
+    view = sched.select(0)
+    with pytest.raises(ValueError, match="event"):
+        view.event_mix(jnp.ones(12), 0)
+
+
+# --------------------------------------------------- engine vs numpy reference
+@pytest.mark.parametrize("backend", ("dense", "sparse"))
+def test_event_push_sum_matches_reference_and_converges(backend):
+    g = T.barabasi_albert(20, 3, seed=4)
+    stream = T.poisson_event_stream(g, horizon=14.0, rate=1.0, seed=5)
+    vals = np.random.default_rng(4).normal(size=g.n)
+    plan = compile_plan(g, backend=backend)
+    dev = np.asarray(push_sum_events(plan, jnp.asarray(vals), stream))
+    ref = G.push_sum_events_reference(g, vals, stream.edges)
+    np.testing.assert_allclose(dev, ref, atol=1e-5)
+    assert np.abs(dev - vals.mean()).max() < 0.05
+
+
+def test_event_spread_failure_draws_replay_exactly():
+    """Per-event failure draws (`fold_in(key, event_index)` through
+    `CommPlan.event_keep`) are host-replayable: passing the realised keep
+    flags to the numpy reference reproduces the device run exactly."""
+    g = T.random_k_regular(16, 4, seed=2)
+    stream = T.poisson_event_stream(g, horizon=6.0, rate=1.0, seed=6)
+    vals = np.random.default_rng(5).normal(size=g.n)
+    plan = compile_plan(g, backend="sparse", failures=FailureModel(link_p=0.6, node_p=0.9))
+    key = jax.random.PRNGKey(8)
+    dev = np.asarray(spread_events(plan, jnp.asarray(vals), stream, key))
+    keep = np.array(
+        [bool(plan.event_keep(jax.random.fold_in(key, i))) for i in range(stream.envelope)]
+    )
+    ref = G.event_spread_reference(g, vals, stream.edges, keep)
+    np.testing.assert_allclose(dev, ref, atol=1e-5)
+    assert abs(dev.sum() - vals.sum()) < 1e-4  # failures never destroy mass
+
+
+def test_leaderless_sketches_over_events():
+    """Barrier-free leaderless n̂: device min-exchange over the stream equals
+    the numpy replay given the same sketches, and the estimate lands."""
+    g = T.random_k_regular(24, 4, seed=3)
+    stream = T.poisson_event_stream(g, horizon=10.0, rate=1.0, seed=7)
+    key = jax.random.PRNGKey(11)
+    n_hat, mins = estimate_size_leaderless_events(
+        g, stream, key, n_sketches=64, return_sketches=True
+    )
+    # replicate the internal sketch draw, replay the min-exchange in numpy
+    k_draw, _ = jax.random.split(key)
+    sketches = np.asarray(jax.random.exponential(k_draw, (g.n, 64)))
+    ref_mins = G.event_spread_min_reference(g, sketches, stream.edges)
+    np.testing.assert_allclose(np.asarray(mins), ref_mins, atol=1e-5)
+    ref_n = (64 - 1) / ref_mins.sum(axis=1)
+    np.testing.assert_allclose(np.asarray(n_hat), ref_n, rtol=1e-4)
+    assert abs(np.median(np.asarray(n_hat)) - g.n) / g.n < 0.3
+
+
+# ------------------------------------------------------- executor bookkeeping
+def _tiny_setup(n=4, per_node=8, dim=3):
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=(n, per_node, dim)).astype(np.float32)
+    ys = rng.integers(0, 2, size=(n, per_node)).astype(np.int32)
+
+    def loss_fn(params, batch):
+        x, y = batch
+        pred = x @ params["w"]
+        return jnp.mean((pred - y.astype(jnp.float32)) ** 2)
+
+    init_one = lambda k: {"w": jax.random.normal(k, (dim,)) * 0.1}
+    return xs, ys, loss_fn, init_one
+
+
+def test_event_trajectory_clocks_staleness_and_counts():
+    from repro.data import batch_index_schedule
+    from repro.fed import init_fl_state, run_event_trajectory
+    from repro.optim import sgd
+
+    n = 4
+    g = T.ring(n)
+    xs, ys, loss_fn, init_one = _tiny_setup(n=n)
+    opt = sgd(1e-2, 0.0)
+    state = init_fl_state(jax.random.PRNGKey(0), n, init_one, opt)
+    # hand-built stream on ring-4 (edges: 0:(0,1) 1:(0,3) 2:(1,2) 3:(2,3)),
+    # horizon 4, two bins; one padding event exercises the identity path
+    stream = T.EventStream(
+        times=np.array([0.5, 1.0, 2.5, 3.0, 4.0], np.float32),
+        edges=np.array([0, 2, 0, 1, -1], np.int32),
+        n_events=4,
+        horizon=4.0,
+        rates=np.ones(g.n_edges),
+    )
+    sched = batch_index_schedule(8, n, 4, 6, seed=0)
+    final, hist, aux = run_event_trajectory(
+        state, loss_fn, opt, compile_plan(g, backend="dense"), stream, xs, ys, sched,
+        b_local=2, n_bins=2,
+    )
+    # participation counts (ring-4 edges: 0:(0,1) 1:(0,3) 2:(1,2) 3:(2,3)):
+    # node0 @0.5, 2.5, 3.0; node1 @0.5, 1.0, 2.5; node2 @1.0; node3 @3.0
+    np.testing.assert_array_equal(aux["node_events"], [3, 3, 1, 1])
+    np.testing.assert_allclose(aux["node_clock"], [3.0, 2.5, 1.0, 3.0], atol=1e-6)
+    assert int(final.round) == 4  # live events only
+    assert hist["events"] == [2, 2] and hist["messages"] == [4, 4]
+    assert hist["time"] == [2.0, 4.0]
+    # staleness: bin0 events (0.5: both fresh → 0.5 each; 1.0: node1 idle
+    # 0.5, node2 idle 1.0) → mean (0.5 + 0.75)/2; bin1 (2.5: node0 idle 2.0,
+    # node1... edge0=(0,1): idle 2.0 and 1.5 → 1.75; 3.0: edge1=(0,3): 0.5
+    # and 3.0 → 1.75) → 1.75
+    np.testing.assert_allclose(hist["staleness"], [0.625, 1.75], atol=1e-5)
+    # train loss recorded in every bin, finite
+    assert all(np.isfinite(hist["train_loss"]))
+
+
+def test_event_trajectory_counts_only_delivered_messages():
+    """A failure draw that kills the exchange spends no messages — but the
+    endpoints still woke, trained and advanced their clocks."""
+    from repro.data import batch_index_schedule
+    from repro.fed import init_fl_state, run_event_trajectory
+    from repro.optim import sgd
+
+    n = 4
+    g = T.ring(n)
+    xs, ys, loss_fn, init_one = _tiny_setup(n=n)
+    opt = sgd(1e-2, 0.0)
+    state = init_fl_state(jax.random.PRNGKey(0), n, init_one, opt)
+    stream = T.poisson_event_stream(g, horizon=3.0, rate=1.0, seed=3)
+    sched = batch_index_schedule(8, n, 4, 6, seed=0)
+    plan = compile_plan(g, backend="dense", failures=FailureModel(link_p=0.0))
+    _, hist, aux = run_event_trajectory(
+        state, loss_fn, opt, plan, stream, xs, ys, sched, b_local=2, n_bins=2
+    )
+    assert sum(hist["messages"]) == 0  # every exchange failed
+    assert sum(hist["events"]) == stream.n_events  # ...but every clock fired
+    assert aux["node_events"].sum() == 2 * stream.n_events
+
+
+def test_event_trajectory_padding_invariant():
+    """Extending the envelope with padding events changes nothing."""
+    from repro.data import batch_index_schedule
+    from repro.fed import init_fl_state, run_event_trajectory
+    from repro.optim import sgd
+
+    n = 4
+    g = T.ring(n)
+    xs, ys, loss_fn, init_one = _tiny_setup(n=n)
+    opt = sgd(1e-2, 0.0)
+    sched = batch_index_schedule(8, n, 4, 6, seed=0)
+    stream = T.poisson_event_stream(g, horizon=3.0, rate=1.0, seed=2)
+    padded = T.poisson_event_stream(g, horizon=3.0, rate=1.0, seed=2, envelope=stream.n_events + 7)
+
+    def run(s):
+        state = init_fl_state(jax.random.PRNGKey(1), n, init_one, opt)
+        final, hist, aux = run_event_trajectory(
+            state, loss_fn, opt, compile_plan(g, backend="dense"), s, xs, ys, sched,
+            b_local=2, n_bins=3,
+        )
+        return final, hist, aux
+
+    f1, h1, a1 = run(stream)
+    f2, h2, a2 = run(padded)
+    np.testing.assert_array_equal(a1["node_events"], a2["node_events"])
+    assert h1["train_loss"] == h2["train_loss"]
+    np.testing.assert_array_equal(
+        np.asarray(f1.params["w"]), np.asarray(f2.params["w"])
+    )
+
+
+@pytest.mark.slow
+def test_event_trajectory_rate1_tracks_synchronous_executor():
+    """Budget-matched end-to-end band: rate-1 clocks over horizon R reach a
+    final test loss in the same regime as R synchronous rounds (events
+    trigger extra local compute, so they may only do better)."""
+    from repro.core.initialisation import InitConfig, gain_from_graph
+    from repro.data import batch_index_schedule, mnist_like, node_datasets
+    from repro.fed import (
+        init_fl_state,
+        make_eval_fn,
+        make_round_fn,
+        run_event_trajectory,
+        run_trajectory,
+    )
+    from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
+    from repro.optim import sgd
+
+    n, per_node, rounds = 16, 64, 20
+    g = T.random_k_regular(n, 4, seed=0)
+    ds = mnist_like(n * per_node + 256, seed=0)
+    parts = [np.arange(i * per_node, (i + 1) * per_node) for i in range(n)]
+    xs, ys = node_datasets(ds, parts)
+    test = (ds.x[-256:], ds.y[-256:])
+    loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
+    opt = sgd(1e-3, 0.5)
+    eval_fn = make_eval_fn(loss_fn)
+    gain = gain_from_graph(g)
+    init_one = lambda k: init_mlp(InitConfig("he_normal", gain), k, hidden=(64, 32))
+    sched = batch_index_schedule(per_node, n, 16, rounds * 2, seed=0)
+    plan = compile_plan(g, backend="sparse")
+
+    state = init_fl_state(jax.random.PRNGKey(0), n, init_one, opt)
+    rf = make_round_fn(loss_fn, opt, plan)
+    _, hist_sync = run_trajectory(
+        state, rf, xs, ys, sched, n_rounds=rounds, eval_every=rounds,
+        eval_fn=eval_fn, eval_batch=test, b_local=2,
+    )
+    stream = T.poisson_event_stream(g, horizon=float(rounds), rate=1.0, seed=1)
+    state2 = init_fl_state(jax.random.PRNGKey(0), n, init_one, opt)
+    _, hist_ev, _ = run_event_trajectory(
+        state2, loss_fn, opt, plan, stream, xs, ys, sched,
+        b_local=2, n_bins=5, eval_fn=eval_fn, eval_batch=test,
+    )
+    sync_final = hist_sync["test_loss"][-1]
+    ev_final = hist_ev["test_loss"][-1]
+    assert ev_final < sync_final + 0.3, (ev_final, sync_final)
+    assert ev_final < hist_ev["test_loss"][0], "no descent over the stream"

@@ -1,6 +1,5 @@
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

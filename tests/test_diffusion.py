@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 
 from repro.core import diffusion as D
 from repro.core import mixing as M
@@ -49,7 +48,6 @@ def test_noise_free_diffusion_matches_markov_power():
     concentrates: the prediction is an expectation, and at d=64 its sampling
     noise (~1/√(2d) ≈ 9%) exceeds the tolerance — the seed suite's failure.
     """
-    import jax, jax.numpy as jnp
     g = T.random_k_regular(32, 4, seed=2)
     res = D.run_diffusion(g, d=1024, sigma_noise=0.0, rounds=50, seed=2)
     m = M.receive_matrix(g)

@@ -10,7 +10,6 @@ lowering the same subgraph in different programs.
 """
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.core import topology as T

@@ -6,9 +6,9 @@ import pytest
 
 from repro.core import topology as T
 from repro.core.initialisation import InitConfig, gain_from_graph
-from repro.data import mnist_like, node_batch_iterator, node_datasets, partition_iid
+from repro.data import mnist_like, node_batch_iterator, node_datasets
 from repro.fed import consensus_params, init_fl_state, make_eval_fn, make_round_fn, sigma_metrics, train_loop
-from repro.models.paper_models import accuracy, classifier_loss, init_mlp, mlp_forward
+from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
 from repro.optim import sgd
 
 

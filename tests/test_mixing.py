@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import mixing as M

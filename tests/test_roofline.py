@@ -1,6 +1,5 @@
 """Unit tests for the roofline derivation layer (HLO parsing + extrapolation)."""
 import numpy as np
-import pytest
 
 from repro.launch import roofline as rl
 

@@ -1,6 +1,5 @@
 """Sharding-rule unit tests (no big mesh needed: specs are pure data)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P

@@ -1,0 +1,126 @@
+"""Offline lint fallback — the container-runnable subset of the CI ruff gate.
+
+CI's ``lint`` job runs ``ruff check`` (rule set pinned in pyproject.toml)
+plus ``ruff format --check``.  The dev container has no ruff and no network,
+so this script re-implements the mechanical subset of the enforced rules on
+the stdlib ``ast``/``tokenize`` — enough to keep the tree clean between CI
+runs:
+
+  F401  module-level import never used (``__init__.py`` re-export files and
+        names listed in ``__all__`` are exempt)
+  F541  f-string without any placeholder
+  E711  ``== None`` / ``!= None`` comparison
+  E712  ``== True`` / ``== False`` comparison
+  E722  bare ``except:``
+  E401  multiple imports on one line (``import a, b``)
+
+Usage: python tools/lint.py [paths...]   (default: src tests benchmarks
+tools examples).  Exit 1 on any finding, printing ruff-style locations.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+DEFAULT_PATHS = ["src", "tests", "benchmarks", "tools", "examples"]
+
+
+def _module_all(tree: ast.Module) -> set[str]:
+    names: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__":
+                    if isinstance(node.value, (ast.List, ast.Tuple)):
+                        names |= {
+                            e.value
+                            for e in node.value.elts
+                            if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                        }
+    return names
+
+
+def _used_names(tree: ast.Module) -> set[str]:
+    """Every ``Name`` load/store in the module (``a.b.c`` marks ``a`` used
+    via the Name node at its root)."""
+    return {node.id for node in ast.walk(tree) if isinstance(node, ast.Name)}
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    src = path.read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:  # E9: syntax errors always fail
+        return [f"{path}:{e.lineno}: E999 syntax error: {e.msg}"]
+    lines = src.splitlines()
+    noqa = {i + 1 for i, line in enumerate(lines) if "# noqa" in line}
+    findings: list[str] = []
+    exported = _module_all(tree)
+    reexport_file = path.name == "__init__.py"
+    used = _used_names(tree)
+
+    # format specs (the ":.2f" in f"{x:.2f}") parse as nested JoinedStrs with
+    # no placeholders of their own — they are not F541 candidates
+    spec_ids = {
+        id(node.format_spec)
+        for node in ast.walk(tree)
+        if isinstance(node, ast.FormattedValue) and node.format_spec is not None
+    }
+
+    imports: list[tuple[str, str, int]] = []  # (bound name, display, lineno)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            if len(node.names) > 1:
+                findings.append(f"{path}:{node.lineno}: E401 multiple imports on one line")
+            for a in node.names:
+                bound = (a.asname or a.name).split(".")[0]
+                imports.append((bound, a.name, node.lineno))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                bound = a.asname or a.name
+                imports.append((bound, f"{node.module}.{a.name}", node.lineno))
+        elif isinstance(node, ast.ExceptHandler) and node.type is None:
+            findings.append(f"{path}:{node.lineno}: E722 bare except")
+        elif isinstance(node, ast.Compare):
+            for op, right in zip(node.ops, node.comparators):
+                if isinstance(op, (ast.Eq, ast.NotEq)) and isinstance(right, ast.Constant):
+                    if right.value is None:
+                        findings.append(f"{path}:{node.lineno}: E711 comparison to None")
+                    elif right.value is True or right.value is False:
+                        findings.append(f"{path}:{node.lineno}: E712 comparison to {right.value}")
+        elif isinstance(node, ast.JoinedStr):
+            if id(node) not in spec_ids and not any(
+                isinstance(v, ast.FormattedValue) for v in node.values
+            ):
+                findings.append(f"{path}:{node.lineno}: F541 f-string without placeholders")
+    if not reexport_file:
+        for bound, display, lineno in imports:
+            if bound not in used and bound not in exported:
+                findings.append(f"{path}:{lineno}: F401 {display!r} imported but unused")
+    return [f for f in findings if int(f.split(":")[1]) not in noqa]
+
+
+def main() -> int:
+    roots = [pathlib.Path(p) for p in (sys.argv[1:] or DEFAULT_PATHS)]
+    files: list[pathlib.Path] = []
+    for r in roots:
+        if r.is_file():
+            files.append(r)
+        elif r.is_dir():
+            files.extend(sorted(r.rglob("*.py")))
+    findings: list[str] = []
+    for f in files:
+        findings.extend(check_file(f))
+    for line in findings:
+        print(line)
+    print(f"{len(findings)} finding(s) across {len(files)} files")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
