@@ -25,6 +25,7 @@ from . import (
     fig7_constant_data,
     fig8_churn,
     fig9_async,
+    fig10_scaling,
     kernels_bench,
     roofline_report,
     rounds_bench,
@@ -41,6 +42,7 @@ MODULES = {
     "fig7": fig7_constant_data,
     "fig8": fig8_churn,
     "fig9": fig9_async,
+    "fig10": fig10_scaling,
     "kernels": kernels_bench,
     "roofline": roofline_report,
     "rounds": rounds_bench,

@@ -1,6 +1,6 @@
 """Core contribution of the paper: network-aware uncoordinated initialisation
 and DecAvg aggregation for decentralised federated learning."""
-from . import commplan, decavg, diffusion, gossip, initialisation, mixing, topology
+from . import commplan, decavg, diffusion, gossip, initialisation, mixing, shardplan, topology
 from .commplan import (
     BACKENDS,
     CommPlan,
@@ -23,6 +23,7 @@ from .decavg import (
     node_failure_mask,
 )
 from .diffusion import DiffusionResult, run_diffusion, sigma_ap_prediction
+from .shardplan import ShardedCommPlan, shard_plan
 from .initialisation import (
     InitConfig,
     gain_from_estimates,
@@ -40,4 +41,4 @@ from .mixing import (
     v_steady_norm_closed_form,
     v_steady_norm_from_degree_sample,
 )
-from .topology import Graph, churn_sequence
+from .topology import EventBatches, Graph, batch_events_by_color, churn_sequence

@@ -39,6 +39,7 @@ from .decavg import (
     mix_pytree_colored,
     mix_pytree_hyb,
     mix_pytree_pairwise,
+    mix_pytree_pairwise_batch,
     mix_pytree_sparse,
     spread_min_pairwise,
     spread_pairwise,
@@ -317,6 +318,37 @@ class CommPlan:
         u, v, w_uv, w_vu, _ = self._event_edge(edge, key)
         return mix_pytree_pairwise(params, u, v, w_uv, w_vu)
 
+    def event_mix_batch(
+        self, params: PyTree, edges, keys: jax.Array | None = None
+    ) -> PyTree:
+        """One **colour step**: a batch of simultaneous asynchronous events
+        on endpoint-disjoint edges (``topology.batch_events_by_color``),
+        applied as a single vectorised gather + scatter-add instead of W
+        sequential pairwise updates — the ROADMAP §14 batching that recovers
+        matmul-shaped work on the event path.
+
+        ``edges``: (W,) traced int32 edge ids, -1 padding = identity.
+        ``keys``: (W,) batch of *per-event* keys (``fold_in(base, i)`` with
+        each event's original stream index), required iff failures are
+        active — the failure draws are then bit-identical to replaying the
+        same events through sequential ``event_mix``.
+        """
+        if self.event_uv is None:
+            raise ValueError(
+                "event rendering needs a statically compiled undirected CommPlan "
+                "(PlanSchedule views and directed plans have no event tables)"
+            )
+        if self.failures.active and keys is None:
+            raise ValueError("failure model active: event_mix_batch needs per-event keys")
+        e = jnp.asarray(edges, jnp.int32)
+        live = e >= 0
+        if self.failures.active:
+            live = live & jax.vmap(self.event_keep)(keys)
+        e0 = jnp.maximum(e, 0)
+        w = self.event_w[e0] * live[:, None]
+        u, v = self.event_uv[e0, 0], self.event_uv[e0, 1]
+        return mix_pytree_pairwise_batch(params, u, v, w[:, 0], w[:, 1])
+
     def event_spread(self, values: jax.Array, edge, key: jax.Array | None = None) -> jax.Array:
         """One asynchronous **push** event — the pairwise, mass-conserving
         rendering of ``spread`` (``s_u ← s_u − M[u,v]·s_u + M[v,u]·s_v``, and
@@ -405,6 +437,13 @@ class CommPlan:
             data_sizes=self.data_sizes if data_sizes is None else data_sizes,
             failures=failures or self.failures,
         )
+
+    def shard(self, *, mesh=None, axis: str | None = None, n_shards: int | None = None):
+        """Render this plan over a node-sharded mesh axis (DESIGN.md §15) —
+        see ``core.shardplan.shard_plan`` for the partition contract."""
+        from .shardplan import shard_plan  # local import: shardplan builds on CommPlan
+
+        return shard_plan(self, mesh=mesh, axis=axis, n_shards=n_shards)
 
 
 def _event_tables(graph: Graph, sizes: np.ndarray | None) -> dict:

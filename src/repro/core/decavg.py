@@ -56,6 +56,7 @@ __all__ = [
     "mix_pytree_colored",
     "mix_pytree_circulant",
     "mix_pytree_pairwise",
+    "mix_pytree_pairwise_batch",
     "spread_pairwise",
     "spread_min_pairwise",
     "failure_receive_matrix",
@@ -245,6 +246,38 @@ def mix_pytree_pairwise(
         new_u = xu + w_uv * (xv - xu)
         new_v = xv + w_vu * (xu - xv)
         return x.at[u].set(new_u.astype(x.dtype)).at[v].set(new_v.astype(x.dtype))
+
+    return jax.tree_util.tree_map(mix_leaf, params)
+
+
+def mix_pytree_pairwise_batch(
+    params: PyTree,
+    u: jax.Array,
+    v: jax.Array,
+    w_uv: jax.Array,
+    w_vu: jax.Array,
+) -> PyTree:
+    """One **colour step**: simultaneous pairwise exchanges on a batch of
+    endpoint-disjoint edges (ROADMAP §14's batched event rendering).
+
+    ``u``/``v``: (W,) int32 endpoint vectors; ``w_uv``/``w_vu``: (W,) f32
+    receive weights.  The edges must be pairwise vertex-disjoint (a matching
+    — ``topology.batch_events_by_color`` produces such batches), so the W
+    sequential ``mix_pytree_pairwise`` updates commute and collapse into one
+    vectorised gather + scatter-*add* of the per-endpoint deltas.  The add
+    form keeps padding safe: a masked event passes ``w = 0``, contributes an
+    exactly-zero delta, and may alias any row (including a live endpoint)
+    without an ordering hazard — unlike scatter-set, whose result under
+    duplicate indices is implementation-defined.  Each live endpoint
+    receives ``x_u + w_uv·(x_v − x_u)`` — the same expression the pairwise
+    form computes, so a batched replay matches the sequential scan.
+    """
+
+    def mix_leaf(x: jax.Array) -> jax.Array:
+        xu, xv = x[u].astype(jnp.float32), x[v].astype(jnp.float32)
+        du = _bcast(w_uv, x.ndim) * (xv - xu)
+        dv = _bcast(w_vu, x.ndim) * (xu - xv)
+        return x.at[u].add(du.astype(x.dtype)).at[v].add(dv.astype(x.dtype))
 
     return jax.tree_util.tree_map(mix_leaf, params)
 

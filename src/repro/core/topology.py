@@ -36,6 +36,8 @@ __all__ = [
     "from_adjacency",
     "churn_sequence",
     "poisson_event_stream",
+    "EventBatches",
+    "batch_events_by_color",
 ]
 
 
@@ -503,6 +505,81 @@ def poisson_event_stream(
         horizon=float(horizon),
         rates=rates,
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class EventBatches:
+    """An ``EventStream`` regrouped into endpoint-disjoint batches.
+
+    Simultaneous (or near-simultaneous) asynchronous events on *disjoint*
+    edges commute exactly — each pairwise exchange touches only its two
+    endpoints — so a run of consecutive events whose edges form a matching
+    is one parallel "colour step" (ROADMAP §14): a single vectorised
+    scatter instead of ``W`` sequential pairwise updates, which recovers
+    matmul-shaped work on the event path (``CommPlan.event_mix_batch``).
+
+    ``edges``        (B, W) int32 edge ids, padded -1 (the identity);
+    ``event_index``  (B, W) int32 position of each event in the *original*
+                     stream, padded -1 — per-event failure keys stay
+                     ``fold_in(key, event_index)``, so a batched replay
+                     draws bit-identical Bernoullis to the sequential scan.
+    """
+
+    edges: np.ndarray  # (B, W) int32, padded -1
+    event_index: np.ndarray  # (B, W) int32, padded -1
+    n_events: int
+
+    @property
+    def n_batches(self) -> int:
+        return self.edges.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.edges.shape[1]
+
+
+def batch_events_by_color(
+    stream: EventStream, graph: Graph, max_width: int | None = None
+) -> EventBatches:
+    """Greedily batch a time-ordered ``EventStream`` into colour steps.
+
+    Walks the live events in time order, growing the current batch until the
+    next event's edge shares an endpoint with one already in it (or the
+    optional ``max_width`` is hit), then starts a new batch — so batches
+    respect event order (only provably-commuting exchanges are merged) and
+    the batching is a pure function of the stream.  Padding events (-1) are
+    dropped; an empty stream yields one all-padding batch so downstream
+    scans keep a static shape.
+    """
+    edge_list = graph.edge_list()
+    ids = stream.edges[: stream.n_events]
+    batches: list[list[int]] = []
+    indices: list[list[int]] = []
+    used: set[int] = set()
+    cur_e: list[int] = []
+    cur_i: list[int] = []
+    for pos, e in enumerate(ids):
+        if e < 0:
+            continue
+        u, v = int(edge_list[e, 0]), int(edge_list[e, 1])
+        full = max_width is not None and len(cur_e) >= max_width
+        if full or u in used or v in used:
+            batches.append(cur_e)
+            indices.append(cur_i)
+            cur_e, cur_i, used = [], [], set()
+        cur_e.append(int(e))
+        cur_i.append(pos)
+        used.update((u, v))
+    if cur_e or not batches:
+        batches.append(cur_e)
+        indices.append(cur_i)
+    width = max(max(len(b) for b in batches), 1)
+    out_e = np.full((len(batches), width), -1, np.int32)
+    out_i = np.full((len(batches), width), -1, np.int32)
+    for b, (es, ix) in enumerate(zip(batches, indices)):
+        out_e[b, : len(es)] = es
+        out_i[b, : len(ix)] = ix
+    return EventBatches(edges=out_e, event_index=out_i, n_events=int((ids >= 0).sum()))
 
 
 def churn_sequence(

@@ -2,6 +2,7 @@
 from .executor import (
     TrajectoryConfig,
     run_event_trajectory,
+    run_sharded_trajectory,
     run_sweep,
     run_trajectory,
     run_warmup_sweep,

@@ -38,7 +38,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import PartitionSpec as P
+
 from repro.core.commplan import CommPlan, compile_plan
+from repro.core.shardplan import ShardedCommPlan, _shard_map
 from repro.core.topology import EventStream, Graph
 
 from .trainer import DFLState, _local_steps, init_fl_state, sigma_metrics
@@ -48,6 +51,7 @@ PyTree = Any
 __all__ = [
     "TrajectoryConfig",
     "run_trajectory",
+    "run_sharded_trajectory",
     "run_event_trajectory",
     "run_warmup_trajectory",
     "run_warmup_sweep",
@@ -277,6 +281,152 @@ def run_trajectory(
     state, cols = _drive_chunks(chunk_fn, state, sched_d, cfg.eval_mask(), cfg, donate=donate)
     hist = _assemble_history(cfg.eval_mask(), cols, eval_fn is not None, track_sigmas)
     return state, hist
+
+
+def run_sharded_trajectory(
+    state: DFLState,
+    loss_fn,
+    optimizer,
+    plan: ShardedCommPlan,
+    xs: np.ndarray,
+    ys: np.ndarray,
+    schedule: np.ndarray,
+    *,
+    n_rounds: int,
+    eval_every: int = 0,
+    eval_fn=None,
+    eval_batch=None,
+    track_sigmas: bool = False,
+    reinit_opt: bool = True,
+    b_local: int | None = None,
+) -> tuple[DFLState, dict[str, list]]:
+    """Node-sharded fused trajectory: the whole round loop inside ONE
+    ``shard_map`` over the plan's node mesh axis (DESIGN.md §15).
+
+    The sharded sibling of ``run_trajectory``: parameter / optimizer stacks,
+    the per-node dataset and the batch schedule enter as node-axis-sharded
+    operands, each shard scans its ``nps`` nodes' local steps, mixing runs
+    through the plan's halo-exchange collectives (``local_mix``), and every
+    per-round metric reduces with ``psum`` — no (n, d) array is ever
+    materialised on one device.  The round discipline (PRNG split, local
+    steps, mix, optimizer reinit) replicates ``make_round_fn`` exactly, so
+    final parameters are bit-identical to the single-device executor for
+    the same inputs (the property ``tests/test_sharded_plan.py`` pins).
+
+    Differences from ``run_trajectory``, both metric-only: scalar metrics
+    reduce as ``psum(local sum)/n`` (a different summation order than one
+    global ``mean``, ~1 ulp), and with ``track_sigmas`` the σ moments are
+    computed every round (collectives cannot sit under ``lax.cond``) with
+    non-eval rounds masked to NaN afterwards.
+
+    ``plan`` must be a static ``ShardedCommPlan`` (``CommPlan.shard()``);
+    schedules are not supported here.  ``eval_fn``/``eval_batch`` follow
+    ``run_trajectory`` (the eval batch is replicated to every shard).
+    """
+    n_nodes = xs.shape[0]
+    if plan.n != n_nodes:
+        raise ValueError(f"plan has {plan.n} nodes but xs carries {n_nodes}")
+    cfg = TrajectoryConfig(n_rounds, eval_every, track_sigmas, 0)
+    sched_d = jnp.asarray(_as_round_schedule(schedule, n_rounds, b_local))
+    xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
+    eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
+    mesh, ax, nps, n = plan.mesh, plan.axis, plan.nps, plan.n
+    tables, tab_specs = plan.mix_operands()
+    has_eval = eval_fn is not None
+    failures_active = plan.failures.active
+    mask_np = cfg.eval_mask()
+    node_idx = jnp.arange(nps)[:, None]
+
+    def sharded_sigmas(params):
+        # σ_ap: per-node moments are shard-local; σ_an needs cross-shard
+        # per-parameter moments — two psum phases (sum, then centred sum)
+        leaves = [
+            l.reshape(l.shape[0], -1).astype(jnp.float32)
+            for l in jax.tree_util.tree_leaves(params)
+        ]
+        d_total = sum(l.shape[1] for l in leaves)
+        mean_n = sum(l.sum(axis=1) for l in leaves) / d_total
+        var_n = sum(((l - mean_n[:, None]) ** 2).sum(axis=1) for l in leaves) / d_total
+        ap = jax.lax.psum(jnp.sqrt(var_n).sum(), ax) / n
+        an_sum = jnp.float32(0.0)
+        for l in leaves:
+            m = jax.lax.psum(l.sum(axis=0), ax) / n
+            v = jax.lax.psum(((l - m[None, :]) ** 2).sum(axis=0), ax) / n
+            an_sum = an_sum + jnp.sqrt(v).sum()
+        return ap.astype(jnp.float32), (an_sum / d_total).astype(jnp.float32)
+
+    def body(carry, per_round, xs_l, ys_l, t):
+        params, opt_state, rng = carry
+        idx, do_eval = per_round  # idx: (nps, b, bs) local slice of the schedule
+        rng, k_mix = jax.random.split(rng)
+        flat = idx.reshape(nps, -1)
+        bx = xs_l[node_idx, flat].reshape(idx.shape + xs_l.shape[2:])
+        by = ys_l[node_idx, flat].reshape(idx.shape)
+        params, opt_state, losses = jax.vmap(partial(_local_steps, loss_fn, optimizer))(
+            params, opt_state, (bx, by)
+        )
+        params = plan.local_mix_any(params, k_mix if failures_active else None, t)
+        if reinit_opt:  # Algorithm 1 line 15
+            opt_state = jax.vmap(optimizer.init)(params)
+        metrics = [jax.lax.psum(losses.sum(), ax).astype(jnp.float32) / n]
+        if has_eval:
+            # local eval sum under cond (no collective inside the branch),
+            # psum unconditionally: psum(NaN) = NaN keeps skip semantics
+            local = jax.lax.cond(
+                do_eval,
+                lambda p: jnp.sum(eval_fn(p, eval_d)).astype(jnp.float32),
+                lambda p: jnp.float32(jnp.nan),
+                params,
+            )
+            metrics.append(jax.lax.psum(local, ax) / n)
+        if track_sigmas:
+            nan = jnp.float32(jnp.nan)
+            ap, an = sharded_sigmas(params)
+            metrics += [jnp.where(do_eval, ap, nan), jnp.where(do_eval, an, nan)]
+        return (params, opt_state, rng), tuple(metrics)
+
+    def traj(params, opt_state, rng, sched, mask, xs_l, ys_l, t):
+        def step(carry, pr):
+            return body(carry, pr, xs_l, ys_l, t)
+
+        return jax.lax.scan(step, (params, opt_state, rng), (sched, mask))
+
+    pspecs = jax.tree_util.tree_map(
+        lambda l: P(ax, *([None] * (l.ndim - 1))), state.params
+    )
+    ospecs = jax.tree_util.tree_map(
+        lambda l: P(ax, *([None] * (l.ndim - 1))), state.opt_state
+    )
+    data_spec = lambda a: P(ax, *([None] * (a.ndim - 1)))  # noqa: E731
+    n_metrics = 1 + int(has_eval) + 2 * int(track_sigmas)
+    f = _shard_map(
+        traj,
+        mesh=mesh,
+        in_specs=(
+            pspecs,
+            ospecs,
+            P(),
+            P(None, ax, None, None),
+            P(),
+            data_spec(xs_d),
+            data_spec(ys_d),
+            tab_specs,
+        ),
+        out_specs=((pspecs, ospecs, P()), tuple(P() for _ in range(n_metrics))),
+        check_rep=False,  # scalar outs are psum-replicated; the static checker
+        # can't always prove it through scan+cond on older jax
+    )
+    (params, opt_state, rng), metrics = jax.jit(f)(
+        state.params, state.opt_state, state.rng, sched_d,
+        jnp.asarray(mask_np), xs_d, ys_d, tables,
+    )
+    cols = [np.asarray(m) for m in metrics]
+    hist = _assemble_history(mask_np, cols, has_eval, track_sigmas)
+    final = DFLState(
+        params=params, opt_state=opt_state,
+        round=state.round + jnp.int32(n_rounds), rng=rng,
+    )
+    return final, hist
 
 
 def run_event_trajectory(

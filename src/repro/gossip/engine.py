@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.commplan import CommPlan, PlanSchedule, compile_plan, compile_schedule
+from repro.core.shardplan import ShardedCommPlan, shard_plan
 from repro.core.topology import EventStream, Graph
 
 from .walker import poll_degrees_device
@@ -66,7 +67,7 @@ __all__ = [
     "estimate_size_leaderless_events",
 ]
 
-Plan = CommPlan | PlanSchedule
+Plan = CommPlan | PlanSchedule | ShardedCommPlan
 
 _EPS = 1e-30  # guards 1/z before mass from the leader one-hot arrives
 # below this, a node's push-sum weight of the leader one-hot is "exactly
@@ -98,6 +99,15 @@ def as_plan(graph_or_plan: Graph | Plan, backend: str = "auto") -> Plan:
             failures=graph_or_plan.failures,
             round_map=graph_or_plan.round_map,
         )
+    if isinstance(graph_or_plan, ShardedCommPlan):
+        # gossip over the node-sharded rendering: estimation's spread /
+        # spread_min scans run through the halo-exchange collectives and
+        # stay bit-identical to the single-device operator
+        sp = graph_or_plan
+        if sp.data_sizes is None:
+            return sp
+        base = compile_plan(sp.graph, backend=sp.backend, failures=sp.failures)
+        return shard_plan(base, mesh=sp.mesh, axis=sp.axis)
     if isinstance(graph_or_plan, CommPlan):
         if graph_or_plan.data_sizes is None:
             return graph_or_plan

@@ -1,24 +1,59 @@
-"""Production mesh construction.
+"""Production and host-CI mesh construction.
 
 Target hardware: TPU v5e pods — 256 chips/pod as a (data=16, model=16) mesh,
 two pods as (pod=2, data=16, model=16).  FL nodes map to the ``data`` axis
 (one 16-chip model-parallel slice per node; 32 nodes multi-pod), tensor
 parallelism to ``model`` (DESIGN.md §2).
 
+The same functions also serve the 8-host-device CI configuration
+(``xla_force_host_platform_device_count=8``): pass an explicit
+``n_devices`` and the pod shape scales down instead of pretending to be a
+TPU pod, and ``node_mesh`` builds the 1-D node-sharding mesh the sharded
+``CommPlan`` rendering (``core.shardplan``, DESIGN.md §15) runs over.
+
 NOTE: functions, not module constants — importing this module must never
 touch jax device state (the dry-run sets XLA_FLAGS *before* jax init).
 """
+
 from __future__ import annotations
 
 import jax
+import numpy as np
 
-__all__ = ["make_production_mesh", "node_axis", "N_CHIPS"]
+__all__ = [
+    "NODE_AXIS",
+    "N_CHIPS",
+    "make_production_mesh",
+    "n_fl_nodes",
+    "node_axis",
+    "node_mesh",
+]
 
 N_CHIPS = {"single": 256, "multi": 512}
+NODE_AXIS = "node"  # the 1-D node-sharding axis name (host / CI meshes)
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+def make_production_mesh(*, multi_pod: bool = False, n_devices: int | None = None):
+    """The (pod,) data × model mesh.
+
+    Default shapes assume pod hardware (256 / 512 chips).  ``n_devices``
+    overrides the total: the model axis shrinks first (data keeps one slice
+    per FL node), so e.g. the 8-host-device CI config yields (data=8,
+    model=1) without pretending to be a TPU pod.
+    """
+    if n_devices is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    else:
+        pods = 2 if multi_pod else 1
+        per_pod = n_devices // pods
+        if per_pod < 1 or n_devices % pods:
+            raise ValueError(f"n_devices={n_devices} cannot fill {pods} pod(s)")
+        data = min(16, per_pod)
+        if per_pod % data:
+            raise ValueError(
+                f"n_devices={n_devices}: per-pod {per_pod} not divisible by data={data}"
+            )
+        shape = (pods, data, per_pod // data) if multi_pod else (data, per_pod // data)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
@@ -28,5 +63,23 @@ def node_axis(*, multi_pod: bool = False):
     return ("pod", "data") if multi_pod else ("data",)
 
 
-def n_fl_nodes(*, multi_pod: bool = False) -> int:
-    return 32 if multi_pod else 16
+def n_fl_nodes(*, multi_pod: bool = False, n_devices: int | None = None) -> int:
+    """FL node slots on the production mesh (= size of the node axis)."""
+    if n_devices is None:
+        return 32 if multi_pod else 16
+    mesh = make_production_mesh(multi_pod=multi_pod, n_devices=n_devices)
+    return int(np.prod([mesh.shape[a] for a in node_axis(multi_pod=multi_pod)]))
+
+
+def node_mesh(n_shards: int, *, axis: str = NODE_AXIS):
+    """A 1-D mesh over the first ``n_shards`` local devices, axis ``"node"``.
+
+    The mesh ``core.shardplan.shard_plan`` / the sharded executor run over on
+    hosts and in CI (where ``xla_force_host_platform_device_count`` provides
+    the devices); on pods, pass ``make_production_mesh`` + ``node_axis``
+    instead.
+    """
+    devices = jax.devices()
+    if n_shards < 1 or n_shards > len(devices):
+        raise ValueError(f"n_shards={n_shards} needs 1..{len(devices)} devices")
+    return jax.sharding.Mesh(np.asarray(devices[:n_shards]), (axis,))

@@ -26,7 +26,14 @@ from repro.configs.base import ArchConfig
 
 PyTree = Any
 
-__all__ = ["param_pspecs", "with_node_axis", "cache_pspecs", "commplan_in_specs", "shardings_for"]
+__all__ = [
+    "param_pspecs",
+    "with_node_axis",
+    "node_stack_specs",
+    "cache_pspecs",
+    "commplan_in_specs",
+    "shardings_for",
+]
 
 _MODEL = "model"
 
@@ -147,6 +154,23 @@ def with_node_axis(specs: PyTree, node_ax) -> PyTree:
         return P(ax, *tuple(s))
 
     return jax.tree_util.tree_map(add, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def node_stack_specs(tree: PyTree, node_ax) -> PyTree:
+    """``P(node_ax, None, ...)`` per leaf of a node-stacked pytree.
+
+    The operand/result specs of the node-sharded renderings (``core
+    .shardplan``, the sharded executor): every leaf carries the FL node
+    dimension first and only that dimension shards.  Unlike
+    ``with_node_axis`` this derives each spec from the leaf's own rank, so
+    it applies to arbitrary stacks (params, opt state, metric buffers)
+    without a per-tensor rule pass.
+    """
+    ax = tuple(node_ax) if isinstance(node_ax, (tuple, list)) else (node_ax,)
+    ax = ax if len(ax) > 1 else ax[0]
+    return jax.tree_util.tree_map(
+        lambda l: P(ax, *([None] * (l.ndim - 1))), tree
+    )
 
 
 def commplan_in_specs(backend: str, node_ax) -> tuple[P, ...]:
