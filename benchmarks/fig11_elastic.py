@@ -1,0 +1,260 @@
+"""Figure 11: elastic membership + fault injection — recovery curves and
+preemption-safety overhead.
+
+The paper trains a fixed population; DESIGN.md §16 makes membership a
+per-round mask axis (nodes join, leave, crash, resume) and layers seeded
+fault scenarios (``core.faults``) plus chunk-boundary checkpointing on top.
+This benchmark measures the three claims that stack makes:
+
+* **recovery curves** — for each fault scenario (correlated crash burst,
+  degree-targeted hub outage, and a mid-run cohort join), test loss and the
+  live population per round against the uninterrupted baseline:
+  ``delta_vs_uninterrupted`` at the horizon and ``rounds_to_recover`` (first
+  post-fault round whose test loss is back within 10% of the baseline's).
+* **checkpoint overhead** — durable save + restore of the full mid-scan
+  carry at n = 64 against the per-chunk scan wall (``overhead_ratio``; the
+  §16 budget is ≤ 10%).
+* **resume parity** — a checkpointed elastic run resumed from its mid-run
+  snapshot must be bit-identical to the uninterrupted one
+  (``parity_bitexact``).
+
+Schema (``BENCH_elastic.json``): ``{device, cpu_count, quick, records: [
+{scenario, n, rounds, final_test_loss, delta_vs_uninterrupted,
+rounds_to_recover, sec_per_round, curve_round, curve_test_loss,
+curve_n_active} | {scenario: "ckpt-overhead", save_ms, restore_ms,
+sec_per_chunk, overhead_ratio} | {scenario: "resume-parity",
+parity_bitexact}]}`` — validated and regression-gated by
+``tools/check_bench.py`` in CI.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import restore_train_state, save_train_state
+from repro.core import topology as T
+from repro.core.commplan import compile_plan
+from repro.core.faults import crash_burst, hub_outage
+from repro.core.initialisation import InitConfig, gain_from_graph
+from repro.core.membership import membership_schedule
+from repro.data import batch_index_schedule, mnist_like, node_datasets
+from repro.fed import (
+    CheckpointPolicy,
+    init_fl_state,
+    make_eval_fn,
+    make_round_fn,
+    run_elastic_trajectory,
+    run_trajectory,
+)
+from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
+from repro.optim import sgd
+
+from .common import emit
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_elastic.json"
+
+BS, B_LOCAL = 16, 2
+
+
+def _setup(n, per_node, hidden, seed=0):
+    graph = T.random_k_regular(n, 8, seed=seed)
+    ds = mnist_like(n * per_node + 512, seed=seed)
+    parts = [np.arange(i * per_node, (i + 1) * per_node) for i in range(n)]
+    xs, ys = node_datasets(ds, parts)
+    test = (ds.x[-512:], ds.y[-512:])
+    loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
+    opt = sgd(1e-3, 0.5)
+    gain = gain_from_graph(graph)
+    init_one = lambda k: init_mlp(InitConfig("he_normal", gain), k, hidden=hidden)
+    init_one_g = lambda k, gn: init_mlp(InitConfig("he_normal", gn), k, hidden=hidden)
+    return graph, xs, ys, test, loss_fn, opt, init_one, init_one_g
+
+
+def _elastic(graph, setup, mem, faults, rounds, eval_every):
+    _, xs, ys, test, loss_fn, opt, init_one, init_one_g = setup
+    sched = batch_index_schedule(xs.shape[1], graph.n, BS, rounds * B_LOCAL, seed=0)
+    state = init_fl_state(jax.random.PRNGKey(0), graph.n, init_one, opt)
+    t0 = time.perf_counter()
+    _, hist, _ = run_elastic_trajectory(
+        state, loss_fn, opt, compile_plan(graph), mem, xs, ys, sched,
+        n_rounds=rounds, eval_every=eval_every, eval_fn=make_eval_fn(loss_fn),
+        eval_batch=test, b_local=B_LOCAL, init_one=init_one_g,
+        faults=faults,
+    )
+    return hist, (time.perf_counter() - t0) / rounds
+
+
+def _recovery(hist, base_hist, fault_end):
+    """First recorded post-fault round whose test loss is back within 10%
+    of the uninterrupted baseline's at the same round; -1.0 if never."""
+    for r, loss, ref in zip(hist["round"], hist["test_loss"], base_hist["test_loss"]):
+        if r >= fault_end and loss <= ref * 1.10:
+            return float(r - fault_end)
+    return -1.0
+
+
+def _scenario_records(n, rounds, per_node, hidden):
+    setup = _setup(n, per_node, hidden)
+    graph = setup[0]
+    eval_every = max(rounds // 20, 1)
+    trivial = membership_schedule(n, rounds)
+    at, dur = rounds // 3, max(rounds // 10, 1)
+
+    cohort = list(range(n - n // 8, n))
+    scenarios = {
+        "none": (trivial, None),
+        "crash": (trivial, crash_burst(graph, rounds, at=at, size=n // 8, duration=dur, seed=0)),
+        "hub": (trivial, hub_outage(graph, rounds, at=at, duration=dur, k=max(n // 16, 1))),
+        "join": (
+            membership_schedule(n, rounds, initial=n - n // 8,
+                                arrivals={at: cohort}, join_warmup=8),
+            None,
+        ),
+    }
+    records, base_hist = [], None
+    for name, (mem, faults) in scenarios.items():
+        hist, spr = _elastic(graph, setup, mem, faults, rounds, eval_every)
+        if name == "none":
+            base_hist = hist
+        fault_end = at + dur if faults is not None else at + mem.join_warmup
+        rec = {
+            "scenario": name,
+            "n": n,
+            "rounds": rounds,
+            "final_test_loss": hist["test_loss"][-1],
+            "delta_vs_uninterrupted": hist["test_loss"][-1] - base_hist["test_loss"][-1],
+            "rounds_to_recover": 0.0 if name == "none" else _recovery(hist, base_hist, fault_end),
+            "sec_per_round": spr,
+            "curve_round": hist["round"],
+            "curve_test_loss": hist["test_loss"],
+            "curve_n_active": hist["n_active"],
+        }
+        records.append(rec)
+        emit(
+            f"fig11.{name}.n{n}",
+            spr * 1e6,
+            f"final={rec['final_test_loss']:.3f};"
+            f"delta={rec['delta_vs_uninterrupted']:+.3f};"
+            f"recover={rec['rounds_to_recover']:.0f};"
+            f"min_active={min(hist['n_active'])}",
+        )
+    return records
+
+
+def _ckpt_overhead_record(n, rounds, per_node, hidden, chunk_size):
+    """Durable save + restore of the full carry vs the per-chunk scan wall."""
+    setup = _setup(n, per_node, hidden)
+    graph, xs, ys, test, loss_fn, opt, init_one, _ = setup
+    sched = batch_index_schedule(per_node, n, BS, rounds * B_LOCAL, seed=0)
+    rf = make_round_fn(loss_fn, opt, compile_plan(graph))
+    kw = dict(n_rounds=rounds, eval_every=max(rounds // 4, 1),
+              eval_fn=make_eval_fn(loss_fn), eval_batch=test,
+              chunk_size=chunk_size, b_local=B_LOCAL)
+    state = init_fl_state(jax.random.PRNGKey(0), n, init_one, opt)
+    run_trajectory(state, rf, xs, ys, sched, **kw)  # compile
+    t0 = time.perf_counter()
+    final, _ = run_trajectory(state, rf, xs, ys, sched, **kw)
+    n_chunks = -(-rounds // chunk_size)
+    sec_per_chunk = (time.perf_counter() - t0) / n_chunks
+
+    payload = {
+        "carry": [np.asarray(l) for l in jax.tree_util.tree_leaves(final)],
+        "outs": [],
+    }
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        for s in range(3):
+            save_train_state(d, s, payload, meta={"chunk": s}, keep_last=2)
+        save_s = (time.perf_counter() - t0) / 3
+        t0 = time.perf_counter()
+        for _ in range(3):
+            restore_train_state(d)
+        restore_s = (time.perf_counter() - t0) / 3
+    ckpt_bytes = sum(a.nbytes for a in payload["carry"])
+    rec = {
+        "scenario": "ckpt-overhead",
+        "n": n,
+        "rounds": rounds,
+        "chunk_rounds": chunk_size,
+        "ckpt_bytes": ckpt_bytes,
+        "save_ms": save_s * 1e3,
+        "restore_ms": restore_s * 1e3,
+        "sec_per_chunk": sec_per_chunk,
+        "overhead_ratio": save_s / sec_per_chunk,
+    }
+    emit(
+        f"fig11.ckpt.n{n}",
+        save_s * 1e6,
+        f"save={rec['save_ms']:.1f}ms;restore={rec['restore_ms']:.1f}ms;"
+        f"chunk={sec_per_chunk:.2f}s;overhead={rec['overhead_ratio'] * 100:.1f}%",
+    )
+    return rec
+
+
+def _resume_parity_record(n, rounds, per_node, hidden):
+    """Checkpoint → resume from the mid-run snapshot → bitwise compare."""
+    setup = _setup(n, per_node, hidden)
+    graph, xs, ys, _, loss_fn, opt, init_one, init_one_g = setup
+    sched = batch_index_schedule(per_node, n, BS, rounds * B_LOCAL, seed=0)
+    plan = compile_plan(graph)
+    mem = membership_schedule(n, rounds, initial=n - 2,
+                              arrivals={1: [n - 2, n - 1]}, join_warmup=3)
+    kw = dict(n_rounds=rounds, eval_every=2, chunk_size=max(rounds // 3, 1),
+              b_local=B_LOCAL, init_one=init_one_g)
+
+    s0 = init_fl_state(jax.random.PRNGKey(1), n, init_one, opt)
+    ref, h_ref, _ = run_elastic_trajectory(s0, loss_fn, opt, plan, mem, xs, ys, sched, **kw)
+    with tempfile.TemporaryDirectory() as d:
+        s1 = init_fl_state(jax.random.PRNGKey(1), n, init_one, opt)
+        run_elastic_trajectory(s1, loss_fn, opt, plan, mem, xs, ys, sched,
+                               checkpoint=CheckpointPolicy(d, every=1), **kw)
+        s2 = init_fl_state(jax.random.PRNGKey(1), n, init_one, opt)
+        got, h_got, _ = run_elastic_trajectory(
+            s2, loss_fn, opt, plan, mem, xs, ys, sched,
+            resume_from=str(pathlib.Path(d) / "step_00000000.ckpt"), **kw,
+        )
+    bit = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(ref), jax.tree_util.tree_leaves(got))
+    ) and h_ref == h_got
+    rec = {"scenario": "resume-parity", "n": n, "rounds": rounds, "parity_bitexact": bool(bit)}
+    emit(f"fig11.resume.n{n}", 0.0, f"bitexact={bit}")
+    return rec
+
+
+def run(quick: bool = True) -> None:
+    n = 32 if quick else 64
+    rounds = 40 if quick else 120
+    per_node = 64 if quick else 128
+    hidden = (64, 32) if quick else (128, 64)
+
+    records = _scenario_records(n, rounds, per_node, hidden)
+    # overhead is save-cost / chunk-wall, so the chunking matters as much as
+    # the model: 48-round chunks (the executor's auto default is ≥ n_rounds
+    # at these scales) amortise one durable ~56 MB write per chunk
+    records.append(_ckpt_overhead_record(
+        64, 96, 64, (128, 64), chunk_size=48
+    ))
+    records.append(_resume_parity_record(16, 12, 32, (32,)))
+
+    OUT.write_text(
+        json.dumps(
+            {
+                "device": str(jax.devices()[0]),
+                "cpu_count": __import__("os").cpu_count(),
+                "quick": quick,
+                "records": records,
+            },
+            indent=2,
+        )
+    )
+    print(f"# wrote {OUT}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -26,6 +26,7 @@ from . import (
     fig8_churn,
     fig9_async,
     fig10_scaling,
+    fig11_elastic,
     kernels_bench,
     roofline_report,
     rounds_bench,
@@ -43,6 +44,7 @@ MODULES = {
     "fig8": fig8_churn,
     "fig9": fig9_async,
     "fig10": fig10_scaling,
+    "fig11": fig11_elastic,
     "kernels": kernels_bench,
     "roofline": roofline_report,
     "rounds": rounds_bench,

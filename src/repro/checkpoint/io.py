@@ -1,10 +1,18 @@
 """Msgpack-based pytree checkpointing.
 
-Layout: one ``.ckpt`` file = msgpack map {treedef: str, leaves: [bytes...],
+Layout: one ``.ckpt`` file = msgpack map {structure, leaves: [bytes...],
 meta: {...}} with each leaf serialised as (dtype, shape, raw bytes).  No
-orbax offline, so this is the deployable minimum: atomic writes (tmp +
-rename), dtype/shape round-trip including bf16, and a step-numbered
-directory convention with a LATEST pointer.
+orbax offline, so this is the deployable minimum: *durable* atomic writes
+(write tmp → fsync → rename → fsync dir), dtype/shape round-trip including
+bf16, a step-numbered directory convention with an atomically-updated
+LATEST pointer, and ``keep_last=`` retention GC.
+
+The rebuild contract is the JSON-able ``structure`` skeleton alone (no
+``str(treedef)`` anywhere): dict nodes are recorded in **sorted key order**
+— the order ``jax.tree_util.tree_flatten`` emits leaves in — so a
+template-less ``load_pytree`` reassembles leaves correctly for any key
+insertion order.  NamedTuples are restored as plain dicts unless a
+``template`` supplies the exact treedef.
 """
 from __future__ import annotations
 
@@ -38,10 +46,29 @@ def _unpack_leaf(d: dict) -> np.ndarray:
     return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(shape)
 
 
+def _fsync_dir(path: str) -> None:
+    """Flush a directory entry (the rename) to disk — best effort: some
+    filesystems refuse O_RDONLY fsync on directories."""
+    try:
+        fd = os.open(path or ".", os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _replace_durable(tmp: str, path: str) -> None:
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(os.path.abspath(path)))
+
+
 def save_pytree(path: str, tree: PyTree, meta: dict | None = None) -> None:
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    leaves, _ = jax.tree_util.tree_flatten(tree)
     payload = {
-        "treedef": str(treedef),
         "structure": _structure_of(tree),
         "leaves": [_pack_leaf(x) for x in leaves],
         "meta": meta or {},
@@ -49,22 +76,31 @@ def save_pytree(path: str, tree: PyTree, meta: dict | None = None) -> None:
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(msgpack.packb(payload, use_bin_type=True))
-    os.replace(tmp, path)
+        f.flush()
+        os.fsync(f.fileno())
+    _replace_durable(tmp, path)
 
 
 def _structure_of(tree: PyTree):
-    """JSON-able skeleton (dicts/lists/None markers) used to rebuild treedef."""
+    """JSON-able skeleton (dicts/lists/markers) used to rebuild the tree.
+
+    Dict items are recorded in **sorted key order**, matching the order
+    ``jax.tree_util.tree_flatten`` yields dict leaves in — the skeleton and
+    the leaf list stay aligned for any insertion order."""
     if isinstance(tree, dict):
-        return {"__kind__": "dict", "items": {k: _structure_of(v) for k, v in tree.items()}}
-    if isinstance(tree, (list, tuple)):
-        kind = "list" if isinstance(tree, list) else "tuple"
-        return {"__kind__": kind, "items": [_structure_of(v) for v in tree]}
-    if hasattr(tree, "_fields"):  # NamedTuple
+        return {
+            "__kind__": "dict",
+            "items": {k: _structure_of(tree[k]) for k in sorted(tree)},
+        }
+    if hasattr(tree, "_fields"):  # NamedTuple (checked before tuple)
         return {
             "__kind__": "namedtuple",
             "name": type(tree).__name__,
             "items": {k: _structure_of(getattr(tree, k)) for k in tree._fields},
         }
+    if isinstance(tree, (list, tuple)):
+        kind = "list" if isinstance(tree, list) else "tuple"
+        return {"__kind__": kind, "items": [_structure_of(v) for v in tree]}
     return {"__kind__": "leaf"}
 
 
@@ -100,13 +136,47 @@ def load_pytree(path: str, template: PyTree | None = None) -> tuple[PyTree, dict
     return _rebuild(payload["structure"], leaves), payload["meta"]
 
 
-def save_train_state(ckpt_dir: str, step: int, state: PyTree, meta: dict | None = None) -> str:
+def _step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
+
+
+def save_train_state(
+    ckpt_dir: str,
+    step: int,
+    state: PyTree,
+    meta: dict | None = None,
+    keep_last: int | None = None,
+) -> str:
+    """Durably save ``state`` as ``step_{step}.ckpt`` and repoint LATEST.
+
+    The LATEST pointer is written tmp + fsync + atomic replace, so a crash
+    at any instant leaves either the old or the new pointer — never a torn
+    one — and the checkpoint it names is already fsynced.  ``keep_last``
+    (when given) garbage-collects older ``step_*.ckpt`` files, keeping the
+    newest ``keep_last`` steps; the file LATEST points at is always kept.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.ckpt")
+    path = _step_path(ckpt_dir, step)
     save_pytree(path, state, meta={"step": step, **(meta or {})})
-    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+    tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+    with open(tmp, "w") as f:
         json.dump({"step": step, "path": path}, f)
-    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"), os.path.join(ckpt_dir, "LATEST"))
+        f.flush()
+        os.fsync(f.fileno())
+    _replace_durable(tmp, os.path.join(ckpt_dir, "LATEST"))
+    if keep_last is not None and keep_last >= 1:
+        kept = sorted(
+            p for p in os.listdir(ckpt_dir)
+            if p.startswith("step_") and p.endswith(".ckpt")
+        )
+        for name in kept[:-keep_last]:
+            victim = os.path.join(ckpt_dir, name)
+            if os.path.abspath(victim) == os.path.abspath(path):
+                continue
+            try:
+                os.remove(victim)
+            except OSError:
+                pass
     return path
 
 

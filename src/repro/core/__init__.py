@@ -1,6 +1,17 @@
 """Core contribution of the paper: network-aware uncoordinated initialisation
 and DecAvg aggregation for decentralised federated learning."""
-from . import commplan, decavg, diffusion, gossip, initialisation, mixing, shardplan, topology
+from . import (
+    commplan,
+    decavg,
+    diffusion,
+    faults,
+    gossip,
+    initialisation,
+    membership,
+    mixing,
+    shardplan,
+    topology,
+)
 from .commplan import (
     BACKENDS,
     CommPlan,
@@ -23,6 +34,17 @@ from .decavg import (
     node_failure_mask,
 )
 from .diffusion import DiffusionResult, run_diffusion, sigma_ap_prediction
+from .faults import (
+    FaultPlan,
+    compose,
+    crash_burst,
+    hub_outage,
+    no_faults,
+    partition,
+    preemption,
+    scenario,
+)
+from .membership import MembershipSchedule, membership_schedule, poisson_membership
 from .shardplan import ShardedCommPlan, shard_plan
 from .initialisation import (
     InitConfig,

@@ -147,37 +147,64 @@ class CommPlan:
         return 0 if self.partners is None else self.partners.shape[0]
 
     # ------------------------------------------------------------- execution
-    def mix(self, params: PyTree, key: jax.Array | None = None) -> PyTree:
+    def _masked(self, active, edge_live) -> bool:
+        """Does this round need the renormalising masked path?  True when the
+        failure model is active OR a deterministic membership/fault mask was
+        supplied — the static fast paths (precomputed weights, HYB) encode
+        the all-alive operator and must not serve masked rounds."""
+        return self.failures.active or active is not None or edge_live is not None
+
+    def mix(
+        self,
+        params: PyTree,
+        key: jax.Array | None = None,
+        *,
+        active: jax.Array | None = None,
+        edge_live: jax.Array | None = None,
+    ) -> PyTree:
         """One DecAvg aggregation of a node-stacked pytree.
 
         Jit-friendly: ``self`` is closed over as compile-time constants, only
-        ``params``/``key`` are traced.  The ``ppermute`` backend here executes
-        its colour schedule as node-axis gathers (single-process semantics);
-        use ``color_round_weights`` + ``decavg.mix_pytree_colored`` inside
-        ``shard_map`` for the true collective rendering (see launch/steps.py).
+        ``params``/``key``/masks are traced.  ``active`` ((n,) bool) and
+        ``edge_live`` ((n_edges,) bool, ``Graph.edge_list()`` order) are
+        deterministic membership / fault-injection masks AND-composed with
+        the Bernoulli failure draws: a masked-out node's row renormalises to
+        the identity (it keeps its own model and nobody receives from it),
+        exactly like a node the failure draw dropped.  The ``ppermute``
+        backend here executes its colour schedule as node-axis gathers
+        (single-process semantics); use ``color_round_weights`` +
+        ``decavg.mix_pytree_colored`` inside ``shard_map`` for the true
+        collective rendering (see launch/steps.py).
         """
         if self.failures.active and key is None:
             raise ValueError("failure model active: mix() needs a PRNG key")
         if self.backend == "dense":
-            return mix_pytree(self._dense_round_matrix(key), params)
+            return mix_pytree(self._dense_round_matrix(key, active, edge_live), params)
         if self.backend == "sparse":
-            if not self.failures.active and self.slot_idx is not None:
+            if not self._masked(active, edge_live) and self.slot_idx is not None:
                 # static topology: HYB layout (ELL slot chain + dense hub
                 # rows) — the fused-gather rendering that beats the dense
-                # einsum on CPU.  Failure rounds renormalise per-edge, so
-                # they take the segment_sum formulation below.
+                # einsum on CPU.  Failure/masked rounds renormalise per-edge,
+                # so they take the segment_sum formulation below.
                 return mix_pytree_hyb(
                     params, self.slot_idx, self.slot_w, self.hyb_self_w,
                     self.hub_rows, self.hub_m,
                 )
-            edge_w, self_w = self._sparse_round_weights(key)
+            edge_w, self_w = self._sparse_round_weights(key, active, edge_live)
             return mix_pytree_sparse(
                 params, self.src, self.dst, edge_w, self_w, n_nodes=self.n
             )
-        color_w, self_w = self.color_round_weights(key)
+        color_w, self_w = self.color_round_weights(key, active, edge_live)
         return mix_pytree_colored(params, self.partners, color_w, self_w)
 
-    def spread(self, values: jax.Array, key: jax.Array | None = None) -> jax.Array:
+    def spread(
+        self,
+        values: jax.Array,
+        key: jax.Array | None = None,
+        *,
+        active: jax.Array | None = None,
+        edge_live: jax.Array | None = None,
+    ) -> jax.Array:
         """One *send-form* (column-stochastic) round: ``values ← Mᵀ values``.
 
         ``mix`` applies the row-stochastic receive operator ``M`` (Eq. 2);
@@ -189,8 +216,11 @@ class CommPlan:
         mass and pushes ``1/(k_j+1)`` along each live edge.
 
         Same backends, same sharding rules and — crucially — the same
-        per-edge/per-node failure draws as ``mix`` for the same ``key``:
-        estimation traffic rides exactly the links training rides.
+        per-edge/per-node failure draws *and* membership masks as ``mix``
+        for the same arguments: estimation traffic rides exactly the links
+        training rides.  Because the masked ``M`` keeps every row summing
+        to 1 (masked-out rows renormalise to the identity), ``Mᵀ`` stays
+        column-stochastic: total mass is conserved under any mask.
 
         ``values``: (n,) or (n, k) float payload.  Returns the same shape.
         """
@@ -201,16 +231,16 @@ class CommPlan:
         if squeeze:
             x = x[:, None]
         if self.backend == "dense":
-            m = self._dense_round_matrix(key)
+            m = self._dense_round_matrix(key, active, edge_live)
             out = jnp.einsum("ji,jk->ik", m, x)
         elif self.backend == "sparse":
-            edge_w, self_w = self._sparse_round_weights(key)
+            edge_w, self_w = self._sparse_round_weights(key, active, edge_live)
             contrib = edge_w[:, None] * x[self.dst]
             out = self_w[:, None] * x + jax.ops.segment_sum(
                 contrib, self.src, num_segments=self.n
             )
         else:
-            color_w, self_w = self.color_round_weights(key)
+            color_w, self_w = self.color_round_weights(key, active, edge_live)
             partners = jnp.asarray(self.partners)
             sends = color_w[:, :, None] * x[None, :, :]  # (n_colors, n, k)
             # node j receives what its colour-c partner sent: partners is an
@@ -220,17 +250,24 @@ class CommPlan:
             out = self_w[:, None] * x + recv.sum(axis=0)
         return out[:, 0] if squeeze else out
 
-    def spread_min(self, values: jax.Array, key: jax.Array | None = None) -> jax.Array:
+    def spread_min(
+        self,
+        values: jax.Array,
+        key: jax.Array | None = None,
+        *,
+        active: jax.Array | None = None,
+        edge_live: jax.Array | None = None,
+    ) -> jax.Array:
         """One round of neighbourhood **min**-exchange over the live links.
 
         ``out[i] = min(values[i], min over i's surviving neighbourhood)`` —
         the transport the leaderless exponential-random-minimum size sketches
         ride (``repro.gossip.estimate_size_leaderless``): extrema propagate
-        through exactly the per-edge/per-node failure draws that ``mix`` /
-        ``spread`` consume for the same ``key``, so sketch traffic shares
-        training's links round for round.  Receive orientation (row i's
-        neighbours); for the undirected graphs the init math assumes this is
-        symmetric.
+        through exactly the per-edge/per-node failure draws and membership
+        masks that ``mix`` / ``spread`` consume for the same arguments, so
+        sketch traffic shares training's links round for round.  Receive
+        orientation (row i's neighbours); for the undirected graphs the init
+        math assumes this is symmetric.
 
         ``values``: (n,) or (n, k) float payload.  Returns the same shape.
         """
@@ -241,17 +278,18 @@ class CommPlan:
         if squeeze:
             x = x[:, None]
         inf = jnp.float32(jnp.inf)
-        if self.failures.active:
-            edge_keep, active = self._edge_node_masks(key)
+        masked = self._masked(active, edge_live)
+        if masked:
+            edge_keep, node_act = self._round_masks_ext(key, active, edge_live)
         if self.backend == "dense":
             keep = self.adjacency > 0
-            if self.failures.active:
+            if masked:
                 keep = keep & edge_keep[self.edge_uid_matrix]
-                keep = keep & active[:, None] & active[None, :]
+                keep = keep & node_act[:, None] & node_act[None, :]
             nbr = jnp.where(keep[:, :, None], x[None, :, :], inf).min(axis=1)
         elif self.backend == "sparse":
-            if self.failures.active:
-                keep = edge_keep[self.edge_uid] & active[self.src] & active[self.dst]
+            if masked:
+                keep = edge_keep[self.edge_uid] & node_act[self.src] & node_act[self.dst]
                 gathered = jnp.where(keep[:, None], x[self.src], inf)
             else:
                 gathered = x[self.src]
@@ -261,9 +299,9 @@ class CommPlan:
         else:
             partners = jnp.asarray(self.partners)
             keep = self.color_edge_uid >= 0
-            if self.failures.active:
+            if masked:
                 keep = keep & edge_keep[jnp.clip(self.color_edge_uid, 0, None)]
-                keep = keep & active[None, :] & jnp.take(active, partners)
+                keep = keep & node_act[None, :] & jnp.take(node_act, partners)
             cand = x[partners]  # (n_colors, n, k)
             nbr = jnp.where(keep[:, :, None], cand, inf).min(axis=0)
         out = jnp.minimum(x, nbr)
@@ -294,8 +332,8 @@ class CommPlan:
         draws carry exactly-zero weights, i.e. the identity update."""
         if self.event_uv is None:
             raise ValueError(
-                "event rendering needs a statically compiled undirected CommPlan "
-                "(PlanSchedule views and directed plans have no event tables)"
+                "event rendering needs an undirected CommPlan "
+                "(directed plans have no event tables)"
             )
         if self.failures.active and key is None:
             raise ValueError("failure model active: event ops need a PRNG key")
@@ -335,8 +373,8 @@ class CommPlan:
         """
         if self.event_uv is None:
             raise ValueError(
-                "event rendering needs a statically compiled undirected CommPlan "
-                "(PlanSchedule views and directed plans have no event tables)"
+                "event rendering needs an undirected CommPlan "
+                "(directed plans have no event tables)"
             )
         if self.failures.active and keys is None:
             raise ValueError("failure model active: event_mix_batch needs per-event keys")
@@ -377,12 +415,35 @@ class CommPlan:
         """(edge_keep (n_edges,), node_active (n,)) — shared across backends."""
         return _draw_failure_masks(self.failures, self.n_edges, self.n, key)
 
-    def _dense_round_matrix(self, key: jax.Array | None) -> jax.Array:
-        if not self.failures.active:
+    def _round_masks_ext(
+        self, key: jax.Array | None, active, edge_live
+    ) -> tuple[jax.Array, jax.Array]:
+        """Bernoulli failure draws AND-composed with the deterministic
+        membership / fault-injection masks.  ``edge_live`` shorter than the
+        draw width (e.g. a plan's own edge count under a schedule envelope)
+        pads with True — padding edges carry zero weight anyway."""
+        if self.failures.active:
+            edge_keep, node_act = self._edge_node_masks(key)
+        else:
+            edge_keep = jnp.ones((max(self.n_edges, 1),), dtype=bool)
+            node_act = jnp.ones((self.n,), dtype=bool)
+        if edge_live is not None:
+            el = jnp.asarray(edge_live, dtype=bool)
+            if el.shape[0] < edge_keep.shape[0]:
+                el = jnp.pad(el, (0, edge_keep.shape[0] - el.shape[0]), constant_values=True)
+            edge_keep = edge_keep & el[: edge_keep.shape[0]]
+        if active is not None:
+            node_act = node_act & jnp.asarray(active, dtype=bool)
+        return edge_keep, node_act
+
+    def _dense_round_matrix(
+        self, key: jax.Array | None, active=None, edge_live=None
+    ) -> jax.Array:
+        if not self._masked(active, edge_live):
             return self.receive
-        edge_keep, active = self._edge_node_masks(key)
+        edge_keep, node_act = self._round_masks_ext(key, active, edge_live)
         keep = edge_keep[self.edge_uid_matrix] & (self.adjacency > 0)
-        keep = keep & active[:, None] & active[None, :]
+        keep = keep & node_act[:, None] & node_act[None, :]
         a = self.adjacency * keep
         sizes = None if self.data_sizes is None else jnp.asarray(self.data_sizes, jnp.float32)
         b = a.astype(jnp.float32) + jnp.eye(self.n, dtype=jnp.float32)
@@ -390,26 +451,30 @@ class CommPlan:
             b = b * sizes[None, :]
         return b / b.sum(axis=1, keepdims=True)
 
-    def _sparse_round_weights(self, key: jax.Array | None) -> tuple[jax.Array, jax.Array]:
-        if not self.failures.active:
+    def _sparse_round_weights(
+        self, key: jax.Array | None, active=None, edge_live=None
+    ) -> tuple[jax.Array, jax.Array]:
+        if not self._masked(active, edge_live):
             return self.edge_w, self.self_w
-        edge_keep, active = self._edge_node_masks(key)
-        keep = edge_keep[self.edge_uid] & active[self.src] & active[self.dst]
+        edge_keep, node_act = self._round_masks_ext(key, active, edge_live)
+        keep = edge_keep[self.edge_uid] & node_act[self.src] & node_act[self.dst]
         num = self.raw_edge_w * keep
         den = self.raw_self_w + jax.ops.segment_sum(
             num, self.dst, num_segments=self.n, indices_are_sorted=True
         )
         return num / den[self.dst], self.raw_self_w / den
 
-    def color_round_weights(self, key: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    def color_round_weights(
+        self, key: jax.Array | None, active=None, edge_live=None
+    ) -> tuple[jax.Array, jax.Array]:
         """((n_colors, n), (n,)) normalised weights for this round's schedule."""
-        if not self.failures.active:
+        if not self._masked(active, edge_live):
             return self.color_w, self.self_w
-        edge_keep, active = self._edge_node_masks(key)
+        edge_keep, node_act = self._round_masks_ext(key, active, edge_live)
         matched = self.color_edge_uid >= 0
         keep = matched & edge_keep[jnp.clip(self.color_edge_uid, 0, None)]
         partners = jnp.asarray(self.partners)
-        keep = keep & active[None, :] & jnp.take(active, partners)
+        keep = keep & node_act[None, :] & jnp.take(node_act, partners)
         num = self.color_raw_w * keep
         den = self.raw_self_w + num.sum(axis=0)
         return num / den[None, :], self.raw_self_w / den
@@ -752,6 +817,16 @@ def _stack_plans(plans: Sequence[CommPlan]) -> dict[str, jax.Array]:
         )
         st["self_w"] = jnp.stack([p.self_w for p in plans])
         st["raw_self_w"] = jnp.stack([p.raw_self_w for p in plans])
+    if all(p.event_uv is not None for p in plans):
+        # event tables pad to the edge envelope with (0, 0) endpoints and
+        # exactly-zero weights — a padded event id is the identity update
+        ev = max(p.event_uv.shape[0] for p in plans)
+        st["event_uv"] = jnp.stack(
+            [jnp.pad(p.event_uv, ((0, ev - p.event_uv.shape[0]), (0, 0))) for p in plans]
+        )
+        st["event_w"] = jnp.stack(
+            [jnp.pad(p.event_w, ((0, ev - p.event_w.shape[0]), (0, 0))) for p in plans]
+        )
     return st
 
 
@@ -865,23 +940,129 @@ class PlanSchedule:
             color_edge_uid=t("color_edge_uid"),
             color_w=t("color_w"),
             color_raw_w=t("color_raw_w"),
+            event_uv=t("event_uv"),
+            event_w=t("event_w"),
             n_edges=self.n_edges_env,
         )
 
     # ------------------------------------------------------------ execution
-    def mix(self, params: PyTree, round_index, key: jax.Array | None = None) -> PyTree:
-        """One DecAvg round under the plan active at ``round_index``."""
-        return self.select(round_index).mix(params, self.round_key(key, round_index))
+    def mix(
+        self,
+        params: PyTree,
+        round_index,
+        key: jax.Array | None = None,
+        *,
+        active: jax.Array | None = None,
+        edge_live: jax.Array | None = None,
+    ) -> PyTree:
+        """One DecAvg round under the plan active at ``round_index``.
+        ``edge_live`` is read at the schedule's shared edge *envelope* width
+        (``n_edges_env``), indexed by the active plan's own edge uids."""
+        return self.select(round_index).mix(
+            params, self.round_key(key, round_index), active=active, edge_live=edge_live
+        )
 
-    def spread(self, values: jax.Array, round_index, key: jax.Array | None = None) -> jax.Array:
+    def spread(
+        self,
+        values: jax.Array,
+        round_index,
+        key: jax.Array | None = None,
+        *,
+        active: jax.Array | None = None,
+        edge_live: jax.Array | None = None,
+    ) -> jax.Array:
         """One send-form (push) round under the active plan."""
-        return self.select(round_index).spread(values, self.round_key(key, round_index))
+        return self.select(round_index).spread(
+            values, self.round_key(key, round_index), active=active, edge_live=edge_live
+        )
 
     def spread_min(
-        self, values: jax.Array, round_index, key: jax.Array | None = None
+        self,
+        values: jax.Array,
+        round_index,
+        key: jax.Array | None = None,
+        *,
+        active: jax.Array | None = None,
+        edge_live: jax.Array | None = None,
     ) -> jax.Array:
         """One min-exchange round under the active plan (leaderless sketches)."""
-        return self.select(round_index).spread_min(values, self.round_key(key, round_index))
+        return self.select(round_index).spread_min(
+            values, self.round_key(key, round_index), active=active, edge_live=edge_live
+        )
+
+    # ------------------------------------------------- event-driven execution
+    def _window(self, time) -> jax.Array:
+        """Unit-time window index of an event timestamp (1 window = 1 round
+        of the round map), traceable in ``time``."""
+        return jnp.floor(jnp.asarray(time, jnp.float32)).astype(jnp.int32)
+
+    def event_key(self, key: jax.Array | None, time) -> jax.Array | None:
+        """Fold the plan id active at ``time``'s window into a per-event
+        failure key — the event-path mirror of ``round_key`` (satellite
+        contract): K > 1 plans draw independent per-event node/link outages;
+        K = 1 leaves the key untouched, bit-identical to the static plan."""
+        if key is None or self.k == 1:
+            return key
+        return jax.random.fold_in(key, self.plan_index(self._window(time)))
+
+    def event_mix(self, params: PyTree, edge, time, key: jax.Array | None = None) -> PyTree:
+        """One asynchronous DecAvg event under the plan active at ``time``.
+        ``edge`` indexes the active plan's own ``Graph.edge_list()`` (use
+        ``event_stream`` to sample streams with per-window edge ids)."""
+        w = self._window(time)
+        return self.select(w).event_mix(params, edge, self.event_key(key, time))
+
+    def event_spread(self, values: jax.Array, edge, time, key: jax.Array | None = None) -> jax.Array:
+        """One asynchronous push event under the plan active at ``time``."""
+        w = self._window(time)
+        return self.select(w).event_spread(values, edge, self.event_key(key, time))
+
+    def event_spread_min(
+        self, values: jax.Array, edge, time, key: jax.Array | None = None
+    ) -> jax.Array:
+        """One asynchronous min event under the plan active at ``time``."""
+        w = self._window(time)
+        return self.select(w).event_spread_min(values, edge, self.event_key(key, time))
+
+    def _host_plan_index(self, round_index: int) -> int:
+        """Host (numpy) replica of ``plan_index`` — event-stream sampling and
+        parity references resolve the active plan without tracing."""
+        if self.k == 1:
+            return 0
+        m = self.round_map
+        if m.kind == "cyclic":
+            return (int(round_index) // m.period) % self.k
+        seq = np.asarray(m.sequence)
+        return int(seq[int(round_index) % len(seq)])
+
+    def event_stream(self, horizon: float, rate: float = 1.0, seed: int = 0):
+        """Sample a Poisson edge-clock stream over the *schedule*: each
+        unit-time window draws its events from the plan active in that
+        window (edge ids in that plan's own edge order), windows concatenate
+        into one time-sorted stream.  K = 1 delegates to the static sampler
+        bit-identically."""
+        from .topology import EventStream, poisson_event_stream
+
+        if self.k == 1:
+            return poisson_event_stream(self.plans[0].graph, horizon, rate=rate, seed=seed)
+        n_windows = int(np.ceil(horizon))
+        times, edges = [], []
+        for w in range(n_windows):
+            g = self.plans[self._host_plan_index(w)].graph
+            span = min(1.0, horizon - w)
+            win = poisson_event_stream(g, span, rate=rate, seed=seed + w)
+            k = win.n_events
+            times.append(np.asarray(win.times[:k]) + w)
+            edges.append(np.asarray(win.edges[:k]))
+        t = np.concatenate(times) if times else np.zeros(0, np.float64)
+        e = np.concatenate(edges) if edges else np.zeros(0, np.int32)
+        return EventStream(
+            times=np.asarray(t, np.float32),
+            edges=np.asarray(e, np.int32),
+            n_events=len(t),
+            horizon=float(horizon),
+            rates=np.full(len(self.plans[0].graph.edge_list()), float(rate)),
+        )
 
     def round_masks(self, key: jax.Array) -> tuple[jax.Array, jax.Array]:
         """Envelope-width failure draws — what every selected plan consumes.

@@ -1,6 +1,8 @@
 """Decentralised federated runtime: vectorised node-ensemble trainer + serving."""
 from .executor import (
+    CheckpointPolicy,
     TrajectoryConfig,
+    run_elastic_trajectory,
     run_event_trajectory,
     run_sharded_trajectory,
     run_sweep,

@@ -31,6 +31,8 @@ bit-exact (same PRNG stream, same batch order, same round body).
 from __future__ import annotations
 
 import dataclasses
+import os
+import signal
 from functools import partial
 from typing import Any, Callable, Sequence
 
@@ -40,19 +42,22 @@ import numpy as np
 
 from jax.sharding import PartitionSpec as P
 
-from repro.core.commplan import CommPlan, compile_plan
+from repro.checkpoint.io import restore_train_state, save_train_state
+from repro.core.commplan import CommPlan, PlanSchedule, compile_plan
 from repro.core.shardplan import ShardedCommPlan, _shard_map
 from repro.core.topology import EventStream, Graph
 
-from .trainer import DFLState, _local_steps, init_fl_state, sigma_metrics
+from .trainer import DFLState, _local_steps, init_fl_state, make_round_fn, sigma_metrics
 
 PyTree = Any
 
 __all__ = [
+    "CheckpointPolicy",
     "TrajectoryConfig",
     "run_trajectory",
     "run_sharded_trajectory",
     "run_event_trajectory",
+    "run_elastic_trajectory",
     "run_warmup_trajectory",
     "run_warmup_sweep",
     "run_sweep",
@@ -88,6 +93,76 @@ class TrajectoryConfig:
         if size <= 0:
             size = self.n_rounds if self.n_rounds <= 1024 else 256
         return [(r0, min(r0 + size, self.n_rounds)) for r0 in range(0, self.n_rounds, size)]
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """Chunk-boundary checkpointing of a fused trajectory (DESIGN.md §16).
+
+    After every ``every``-th chunk the executor snapshots the **full scan
+    carry** (params, optimizer state, PRNG stream, data cursors, virtual
+    clocks, metric accumulators) plus the realised per-chunk metric buffers
+    into ``dir`` via the durable ``checkpoint.io`` layout, repointing LATEST
+    and keeping the newest ``keep_last`` steps.  A later call with
+    ``resume_from=dir`` replays the remaining chunks **bit-identically** —
+    the chunk programs are pure functions of the restored carry.
+
+    ``kill_after`` is the fault-injection hook (``core.faults.preemption``):
+    chunk index after whose checkpoint the process SIGKILLs itself —
+    uncatchable, mid-run, exactly the preemption the resume contract must
+    survive.  -1 disables.
+    """
+
+    dir: str
+    every: int = 1
+    keep_last: int = 3
+    kill_after: int = -1
+
+
+def _save_chunk_ckpt(
+    policy: CheckpointPolicy, chunk_idx: int, is_last: bool, carry, outs, meta: dict
+) -> None:
+    due = policy.every <= 1 or (chunk_idx + 1) % policy.every == 0
+    if due or is_last or policy.kill_after == chunk_idx:
+        payload = {
+            "carry": [np.asarray(jax.device_get(l)) for l in jax.tree_util.tree_leaves(carry)],
+            "outs": [[np.asarray(c) for c in o] for o in outs],
+        }
+        save_train_state(
+            policy.dir, chunk_idx, payload,
+            meta={**meta, "chunk": chunk_idx}, keep_last=policy.keep_last,
+        )
+    if policy.kill_after == chunk_idx:
+        os.kill(os.getpid(), signal.SIGKILL)
+
+
+def _load_resume(resume_from: str, meta_id: dict):
+    """(payload, start_chunk) from a checkpoint dir, or None to start fresh.
+    Every identity field recorded at save time must match the caller's —
+    resuming under different trajectory knobs would not be a replay."""
+    restored = restore_train_state(resume_from)
+    if restored is None:
+        return None
+    payload, meta = restored
+    for k, v in meta_id.items():
+        if meta.get(k) != v:
+            raise ValueError(
+                f"checkpoint at {resume_from!r} was written with {k}={meta.get(k)!r}, "
+                f"but this run has {k}={v!r} — resume must replay the same trajectory"
+            )
+    return payload, int(meta["chunk"]) + 1
+
+
+def _restore_carry(template, payload) -> PyTree:
+    """Rebuild the scan carry from checkpointed leaves, using the live
+    template's treedef (NamedTuples and custom nodes round-trip exactly)."""
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = payload["carry"]
+    if treedef.num_leaves != len(leaves):
+        raise ValueError(
+            f"checkpoint carries {len(leaves)} leaves, live state wants {treedef.num_leaves}"
+        )
+    return jax.tree_util.tree_unflatten(treedef, [jnp.asarray(l) for l in leaves])
 
 
 def stack_states(states: Sequence[DFLState]) -> DFLState:
@@ -227,22 +302,36 @@ def _assemble_history(
 def _drive_chunks(
     chunk_fn, state, sched_d, mask_np, cfg, *,
     round_axis: int = 0, donate: bool = False, skip: int = 0, head_outs=(),
+    checkpoint: CheckpointPolicy | None = None, ckpt_meta: dict | None = None,
 ):
     """Run the chunk schedule; one host sync, after the last chunk.
 
     ``skip``/``head_outs`` let a caller that already executed the first
-    ``skip`` chunks through a different program (the fused warmup) hand over
-    their metric buffers and continue here.
+    ``skip`` chunks through a different program (the fused warmup) — or a
+    resumed run that restored them from a checkpoint — hand over their
+    metric buffers and continue here.  ``sched_d`` may be any pytree of
+    round-axis arrays (the elastic executor threads membership masks
+    alongside the batch schedule).  With a ``checkpoint`` policy the carry
+    and accumulated metric buffers snapshot at chunk boundaries — syncing
+    the carry to host is the checkpoint's cost, paid only on saving chunks.
     """
     if donate:
         # first chunk call would otherwise donate (delete) the caller's state
         state = jax.tree_util.tree_map(jnp.copy, state)
     mask_d = jnp.asarray(mask_np)
     outs = list(head_outs)
-    for r0, r1 in cfg.chunks()[skip:]:
-        sched_c = jax.lax.slice_in_dim(sched_d, r0, r1, axis=round_axis)
+    chunks = cfg.chunks()
+    for ci in range(skip, len(chunks)):
+        r0, r1 = chunks[ci]
+        sched_c = jax.tree_util.tree_map(
+            lambda a: jax.lax.slice_in_dim(a, r0, r1, axis=round_axis), sched_d
+        )
         state, out = chunk_fn(state, sched_c, mask_d[r0:r1])
         outs.append(out)
+        if checkpoint is not None:
+            _save_chunk_ckpt(
+                checkpoint, ci, ci == len(chunks) - 1, state, outs, ckpt_meta or {}
+            )
     n_cols = len(outs[0])
     cols = [
         np.concatenate([np.asarray(o[i]) for o in outs], axis=-1) for i in range(n_cols)
@@ -264,6 +353,8 @@ def run_trajectory(
     track_sigmas: bool = False,
     chunk_size: int = 0,
     b_local: int | None = None,
+    checkpoint: CheckpointPolicy | None = None,
+    resume_from: str | None = None,
 ) -> tuple[DFLState, dict[str, list]]:
     """Run a full trajectory fused on device.  Drop-in for ``train_loop``:
     same ``round_fn``, same history dict, bit-identical results — minus the
@@ -272,13 +363,35 @@ def run_trajectory(
     ``schedule`` is ``batch_index_schedule(...)`` output covering
     ``n_rounds × b_local`` minibatches (or already round-shaped
     ``(n_rounds, n, b, bs)``); give ``b_local`` to validate the split.
+
+    ``checkpoint`` snapshots the carry at chunk boundaries; ``resume_from``
+    restores the newest snapshot in that directory and replays the remaining
+    chunks — the resumed run's final params and metric history are
+    **bit-identical** to the uninterrupted run's (the preemption-safety
+    contract, subprocess-kill-tested), because each chunk is a pure function
+    of the restored carry.  Pass the *same* initial ``state``/arguments as
+    the original run; with no checkpoint on disk the run starts fresh.
     """
     cfg = TrajectoryConfig(n_rounds, eval_every, track_sigmas, chunk_size)
     sched_d = jnp.asarray(_as_round_schedule(schedule, n_rounds, b_local))
     xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
     eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
     chunk_fn, donate, _ = _build_chunk_fn(round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas)
-    state, cols = _drive_chunks(chunk_fn, state, sched_d, cfg.eval_mask(), cfg, donate=donate)
+    meta_id = {
+        "kind": "trajectory", "n_rounds": n_rounds, "eval_every": eval_every,
+        "track_sigmas": track_sigmas, "chunk_size": cfg.chunk_size,
+    }
+    skip, head_outs = 0, ()
+    if resume_from is not None:
+        resumed = _load_resume(resume_from, meta_id)
+        if resumed is not None:
+            payload, skip = resumed
+            state = _restore_carry(state, payload)
+            head_outs = [tuple(np.asarray(c) for c in o) for o in payload["outs"]]
+    state, cols = _drive_chunks(
+        chunk_fn, state, sched_d, cfg.eval_mask(), cfg, donate=donate,
+        skip=skip, head_outs=head_outs, checkpoint=checkpoint, ckpt_meta=meta_id,
+    )
     hist = _assemble_history(cfg.eval_mask(), cols, eval_fn is not None, track_sigmas)
     return state, hist
 
@@ -444,6 +557,9 @@ def run_event_trajectory(
     eval_fn=None,
     eval_batch=None,
     reinit_opt: bool = True,
+    chunk_events: int = 0,
+    checkpoint: CheckpointPolicy | None = None,
+    resume_from: str | None = None,
 ) -> tuple[DFLState, dict[str, list], dict[str, np.ndarray]]:
     """Event-driven (asynchronous) DFL trajectory: no global round barrier.
 
@@ -481,6 +597,15 @@ def run_event_trajectory(
     Semantics knobs mirror ``make_round_fn``; ``plan`` may be a ``Graph``
     (compiled with the auto backend).  Returns ``(final_state, history,
     aux)`` with ``aux`` the per-node clocks/event counts.
+
+    ``chunk_events`` bounds events per jitted call (0 = the whole envelope,
+    the fully-fused default); the metric accumulators ride the scan carry,
+    so chunking changes nothing numerically.  ``checkpoint``/``resume_from``
+    follow ``run_trajectory``: the full carry (params, opt state, event
+    counts = data cursors, virtual clocks, per-bin accumulators) snapshots
+    at chunk boundaries and a resumed run — fed the *same* initial
+    ``state`` — replays the remaining events bit-identically (the per-event
+    failure key stream re-derives from ``state.rng``, not from the carry).
     """
     plan = compile_plan(plan) if isinstance(plan, Graph) else plan
     if plan.event_uv is None:
@@ -573,24 +698,43 @@ def run_event_trajectory(
         return (params, opt_state, counts, clocks, acc), None
 
     @jax.jit
-    def drive(params, opt_state):
-        counts = jnp.zeros(n_nodes, jnp.int32)
-        clocks = jnp.zeros(n_nodes, jnp.float32)
-        zeros = jnp.zeros(n_bins, jnp.float32)
-        acc0 = (zeros, zeros, zeros, zeros, jnp.full(n_bins, jnp.nan, jnp.float32))
-        inp = (
-            jnp.arange(env, dtype=jnp.int32),
-            jnp.asarray(stream.edges),
-            jnp.asarray(stream.times),
-            jnp.asarray(bins_np, jnp.int32),
-            jnp.asarray(do_eval_np),
-        )
-        carry, _ = jax.lax.scan(body, (params, opt_state, counts, clocks, acc0), inp)
+    def drive_chunk(carry, inp):
+        carry, _ = jax.lax.scan(body, carry, inp)
         return carry
 
-    params, opt_state, counts, clocks, (loss_sum, cnt, stale_sum, msg_cnt, test_bin) = drive(
-        state.params, state.opt_state
+    zeros = jnp.zeros(n_bins, jnp.float32)
+    carry = (
+        state.params,
+        state.opt_state,
+        jnp.zeros(n_nodes, jnp.int32),
+        jnp.zeros(n_nodes, jnp.float32),
+        (zeros, zeros, zeros, zeros, jnp.full(n_bins, jnp.nan, jnp.float32)),
     )
+    inp_all = (
+        jnp.arange(env, dtype=jnp.int32),
+        jnp.asarray(stream.edges),
+        jnp.asarray(stream.times),
+        jnp.asarray(bins_np, jnp.int32),
+        jnp.asarray(do_eval_np),
+    )
+    size = env if chunk_events <= 0 else int(chunk_events)
+    bounds = [(i0, min(i0 + size, env)) for i0 in range(0, env, size)]
+    meta_id = {
+        "kind": "event", "env": env, "n_bins": n_bins,
+        "chunk_events": size, "reinit_opt": bool(reinit_opt),
+    }
+    skip = 0
+    if resume_from is not None:
+        resumed = _load_resume(resume_from, meta_id)
+        if resumed is not None:
+            payload, skip = resumed
+            carry = _restore_carry(carry, payload)
+    for ci in range(skip, len(bounds)):
+        i0, i1 = bounds[ci]
+        carry = drive_chunk(carry, tuple(a[i0:i1] for a in inp_all))
+        if checkpoint is not None:
+            _save_chunk_ckpt(checkpoint, ci, ci == len(bounds) - 1, carry, [], meta_id)
+    params, opt_state, counts, clocks, (loss_sum, cnt, stale_sum, msg_cnt, test_bin) = carry
     cnt_np = np.asarray(cnt)
     safe = np.maximum(cnt_np, 1.0)
     width = stream.horizon / n_bins
@@ -613,6 +757,240 @@ def run_event_trajectory(
     )
     aux = {"node_clock": np.asarray(clocks), "node_events": np.asarray(counts)}
     return final, hist, aux
+
+
+def run_elastic_trajectory(
+    state: DFLState,
+    loss_fn,
+    optimizer,
+    plan: CommPlan | PlanSchedule | Graph,
+    membership,
+    xs: np.ndarray,
+    ys: np.ndarray,
+    schedule: np.ndarray,
+    *,
+    n_rounds: int,
+    eval_every: int = 0,
+    eval_fn=None,
+    eval_batch=None,
+    reinit_opt: bool = True,
+    b_local: int | None = None,
+    chunk_size: int = 0,
+    init_one: Callable[[jax.Array, jax.Array], PyTree] | None = None,
+    n_sketches: int = 32,
+    faults=None,
+    checkpoint: CheckpointPolicy | None = None,
+    resume_from: str | None = None,
+) -> tuple[DFLState, dict[str, list], dict[str, np.ndarray]]:
+    """Elastic-membership fused trajectory: nodes join, leave, crash — the
+    static-envelope rendering of DESIGN.md §16.
+
+    The scanned round body runs at the full n-node envelope every round;
+    a ``core.membership.MembershipSchedule`` lowers to per-round masks that
+    (a) freeze non-members' params/optimizer (their local phase computes
+    and is discarded — static shapes, no recompilation), and (b) thread
+    ``active=`` / ``edge_live=`` into the ``CommPlan`` operators, where the
+    masked receive matrix renormalises members' rows over the live
+    neighbourhood and turns non-members into identity rows.  A
+    ``core.faults.FaultPlan`` ANDs its correlated outage masks into the
+    same channel.
+
+    Join protocol (§4.4 applied mid-run): an arriving node redraws Exp(1)
+    sketches; every gossip-active node min-exchanges them each round
+    (``spread_min`` riding the *same* per-round failure key as the training
+    mix, so estimation shares training's links); after the membership's
+    ``join_warmup`` rounds the joiner initialises **uncoordinated** via
+    ``init_one(key, gain)`` with the size-only gain ``√n̂`` from its own
+    online sketches — no leader, no barrier, nobody else pauses.
+
+    A membership with no dynamics (``membership.trivial``) and no faults
+    delegates to ``make_round_fn`` + ``run_trajectory`` — the zero-event
+    path IS the static executor, bit for bit (the K = 1 contract applied to
+    membership).  ``checkpoint``/``resume_from`` snapshot the full carry
+    (params, opt state, PRNG, sketches) exactly like ``run_trajectory``.
+
+    Returns ``(final_state, history, aux)``: history rows at the eval mask
+    with ``n_active`` alongside the losses; ``aux`` carries the final
+    per-node n̂ from the carried sketches.
+    """
+    plan = compile_plan(plan) if isinstance(plan, Graph) else plan
+    n_nodes = xs.shape[0]
+    if plan.n != n_nodes:
+        raise ValueError(f"plan has {plan.n} nodes but xs carries {n_nodes}")
+    if membership.n != n_nodes or membership.n_rounds != n_rounds:
+        raise ValueError(
+            f"membership is ({membership.n_rounds}, {membership.n}) but the run "
+            f"wants ({n_rounds}, {n_nodes})"
+        )
+    trivial_faults = faults is None or faults.trivial
+    if faults is not None and (faults.n != n_nodes or faults.n_rounds != n_rounds):
+        raise ValueError(
+            f"fault plan is ({faults.n_rounds}, {faults.n}) but the run wants "
+            f"({n_rounds}, {n_nodes})"
+        )
+    if membership.trivial and trivial_faults:
+        round_fn = make_round_fn(loss_fn, optimizer, plan, reinit_opt=reinit_opt)
+        state, hist = run_trajectory(
+            state, round_fn, xs, ys, schedule,
+            n_rounds=n_rounds, eval_every=eval_every, eval_fn=eval_fn,
+            eval_batch=eval_batch, chunk_size=chunk_size, b_local=b_local,
+            checkpoint=checkpoint, resume_from=resume_from,
+        )
+        hist["n_active"] = [n_nodes] * len(hist["round"])
+        return state, hist, {"n_hat": np.full(n_nodes, float(n_nodes))}
+    if membership.inits.any() and init_one is None:
+        raise ValueError("membership has joining nodes: init_one(key, gain) is required")
+
+    scheduled = isinstance(plan, PlanSchedule)
+    failures_active = plan.failures.active
+    has_inits = bool(membership.inits.any())
+    cfg = TrajectoryConfig(n_rounds, eval_every, False, chunk_size)
+    mask_np = cfg.eval_mask()
+    sched_np = _as_round_schedule(schedule, n_rounds, b_local)
+    xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
+    eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
+    node_idx = jnp.arange(n_nodes)[:, None]
+    n_edges = plan.n_edges_env if scheduled else plan.n_edges
+    if trivial_faults:
+        node_up = np.ones((n_rounds, n_nodes), bool)
+        edge_up = np.ones((n_rounds, max(n_edges, 1)), bool)
+    else:
+        node_up, edge_up = faults.node_up, faults.edge_up
+
+    # aux PRNG streams fork off state.rng without consuming from it: the
+    # training stream (per-round k_mix splits) stays the static executors'
+    k_fresh, k_init = jax.random.split(jax.random.fold_in(state.rng, 0x5EED))
+    sketches0 = jax.random.exponential(
+        jax.random.fold_in(k_fresh, n_rounds), (n_nodes, n_sketches)
+    )
+
+    def per_node_where(cond, new, old):
+        return jax.tree_util.tree_map(
+            lambda a, b: jnp.where(cond.reshape((-1,) + (1,) * (a.ndim - 1)), a, b),
+            new, old,
+        )
+
+    def gather_batch(idx):
+        flat = idx.reshape(n_nodes, -1)
+        bx = xs_d[node_idx, flat].reshape(idx.shape + xs_d.shape[2:])
+        by = ys_d[node_idx, flat].reshape(idx.shape)
+        return bx, by
+
+    def body(carry, per_round):
+        params, opt_state, rng, sketches = carry
+        idx, tr_m, gs_m, jn, ini, nup, eup, r, do_eval = per_round
+        tr_eff = tr_m & nup
+        gs_eff = gs_m & nup
+        rng, k_mix = jax.random.split(rng)
+        key = k_mix if failures_active else None
+
+        # 1. joiners whose warmup just completed initialise uncoordinated,
+        # with the size-only gain √n̂ from their own carried sketches
+        # (traced only when the schedule has inits at all — host knowledge)
+        def do_init(po):
+            p, o = po
+            gains = jnp.sqrt(jnp.maximum((n_sketches - 1) / jnp.maximum(
+                sketches.sum(axis=1), jnp.float32(1e-30)), 1.0))
+            kr = jax.random.fold_in(k_init, r)
+            keys = jax.vmap(lambda i: jax.random.fold_in(kr, i))(jnp.arange(n_nodes))
+            p = per_node_where(ini, jax.vmap(init_one)(keys, gains), p)
+            o = per_node_where(ini, jax.vmap(optimizer.init)(p), o)
+            return p, o
+
+        if has_inits:
+            params, opt_state = jax.lax.cond(
+                ini.any(), do_init, lambda po: po, (params, opt_state)
+            )
+
+        # 2. local phase at the full envelope; non-members are frozen
+        bx, by = gather_batch(idx)
+        new_p, new_o, losses = jax.vmap(partial(_local_steps, loss_fn, optimizer))(
+            params, opt_state, (bx, by)
+        )
+        params = per_node_where(tr_eff, new_p, params)
+        opt_state = per_node_where(tr_eff, new_o, opt_state)
+
+        # 3. sketch transport: arrivals redraw, the gossip-active population
+        # min-exchanges over the same per-round failure draws as the mix
+        fresh = jax.random.exponential(
+            jax.random.fold_in(k_fresh, r), (n_nodes, n_sketches)
+        )
+        sketches = jnp.where(jn[:, None], fresh, sketches)
+        if scheduled:
+            sketches = plan.spread_min(sketches, r, key, active=gs_eff, edge_live=eup)
+            params = plan.mix(params, r, key, active=tr_eff, edge_live=eup)
+        else:
+            sketches = plan.spread_min(sketches, key, active=gs_eff, edge_live=eup)
+            params = plan.mix(params, key, active=tr_eff, edge_live=eup)
+        if reinit_opt:  # Algorithm 1 line 15, members only
+            opt_state = per_node_where(
+                tr_eff, jax.vmap(optimizer.init)(params), opt_state
+            )
+
+        # 4. metrics over the live training population
+        n_act = tr_eff.sum().astype(jnp.float32)
+        safe = jnp.maximum(n_act, 1.0)
+        outs = [((losses * tr_eff).sum() / safe).astype(jnp.float32)]
+        if eval_fn is not None:
+            outs.append(jax.lax.cond(
+                do_eval,
+                lambda p: ((eval_fn(p, eval_d) * tr_eff).sum() / safe).astype(jnp.float32),
+                lambda p: jnp.float32(jnp.nan),
+                params,
+            ))
+        outs.append(n_act)
+        return (params, opt_state, rng, sketches), tuple(outs)
+
+    def chunk_inner(carry, sched_chunk, mask_chunk):
+        def step(c, inp):
+            sc, do_eval = inp
+            return body(c, (*sc, do_eval))
+
+        return jax.lax.scan(step, carry, (sched_chunk, mask_chunk))
+
+    chunk_fn = jax.jit(chunk_inner)
+    sched_tuple = (
+        jnp.asarray(sched_np),
+        jnp.asarray(membership.active),
+        jnp.asarray(membership.gossip),
+        jnp.asarray(membership.joins),
+        jnp.asarray(membership.inits),
+        jnp.asarray(node_up),
+        jnp.asarray(edge_up),
+        jnp.arange(n_rounds, dtype=jnp.int32),
+    )
+    carry = (state.params, state.opt_state, state.rng, sketches0)
+    meta_id = {
+        "kind": "elastic", "n_rounds": n_rounds, "eval_every": eval_every,
+        "chunk_size": cfg.chunk_size, "n_sketches": n_sketches,
+    }
+    skip, head_outs = 0, ()
+    if resume_from is not None:
+        resumed = _load_resume(resume_from, meta_id)
+        if resumed is not None:
+            payload, skip = resumed
+            carry = _restore_carry(carry, payload)
+            head_outs = [tuple(np.asarray(c) for c in o) for o in payload["outs"]]
+    carry, cols = _drive_chunks(
+        chunk_fn, carry, sched_tuple, mask_np, cfg,
+        skip=skip, head_outs=head_outs, checkpoint=checkpoint, ckpt_meta=meta_id,
+    )
+    params, opt_state, rng, sketches = carry
+    rounds_sel = np.nonzero(mask_np)[0]
+    hist = {
+        "round": [int(r) for r in rounds_sel],
+        "train_loss": [float(v) for v in cols[0][rounds_sel]],
+        "test_loss": (
+            [float(v) for v in cols[1][rounds_sel]] if eval_fn is not None else []
+        ),
+        "n_active": [int(v) for v in cols[-1][rounds_sel]],
+    }
+    final = DFLState(
+        params=params, opt_state=opt_state,
+        round=state.round + jnp.int32(n_rounds), rng=rng,
+    )
+    n_hat = (n_sketches - 1) / np.maximum(np.asarray(sketches).sum(axis=1), 1e-30)
+    return final, hist, {"n_hat": n_hat}
 
 
 def run_warmup_trajectory(

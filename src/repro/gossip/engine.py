@@ -288,20 +288,33 @@ def _scan_events(plan: Plan | Graph, op: str, x0: jax.Array, stream: EventStream
     analogue of the per-round ``fold_in`` discipline, so a host reference
     given the realised keep flags replays the exact sequence.  Padding
     events (edge = -1) are the identity, which is what lets streams of
-    different realised lengths share one compiled program."""
+    different realised lengths share one compiled program.
+
+    Over a K > 1 ``PlanSchedule`` the scan also carries the event *times*:
+    each event executes under the plan active in its unit-time window
+    (``PlanSchedule.event_stream`` samples streams with per-window edge
+    ids) and the window's plan id folds into the per-event failure key
+    (``event_key``) — the event-path mirror of ``round_key``, so resampled
+    plans draw independent node/link outages."""
     plan = as_plan(plan)
-    if isinstance(plan, PlanSchedule):
-        if plan.k == 1:
-            # the K = 1 contract: a size-1 schedule IS the static plan
-            plan = plan.plans[0]
-        else:
-            raise ValueError(
-                "event-driven gossip runs on a static CommPlan — realise the "
-                "dynamic graph into per-edge rates instead of a PlanSchedule"
-            )
+    if isinstance(plan, PlanSchedule) and plan.k == 1:
+        # the K = 1 contract: a size-1 schedule IS the static plan
+        plan = plan.plans[0]
     if plan.failures.active and key is None:
         raise ValueError("failure model active: event gossip needs a PRNG key")
     edges = jnp.asarray(stream.edges)
+
+    if isinstance(plan, PlanSchedule):
+        times = jnp.asarray(stream.times)
+
+        def body(x, inp):
+            i, e, t = inp
+            k = None if key is None else jax.random.fold_in(key, i)
+            return getattr(plan, f"event_{op}")(x, e, t, k), None
+
+        idx = jnp.arange(stream.envelope, dtype=jnp.int32)
+        x, _ = jax.lax.scan(body, jnp.asarray(x0, jnp.float32), (idx, edges, times))
+        return x
 
     def body(x, inp):
         i, e = inp

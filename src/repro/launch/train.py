@@ -20,6 +20,13 @@ Examples:
     # DecAvg exchanges scanned over the realised event stream
     python -m repro.launch.train --model mlp --topology ba --async --event-rate 1.0 \
         --event-horizon 100
+    # elastic membership: 4 nodes arrive at round 50, estimate n online, and
+    # initialise uncoordinated mid-run; correlated crash burst injected
+    python -m repro.launch.train --model mlp --topology kregular --elastic \
+        --join-nodes 4 --join-round 50 --fault-scenario crash
+    # preemption-safe: checkpoint every chunk, then resume bit-identically
+    python -m repro.launch.train --model mlp --rounds 100 --ckpt-dir /tmp/ck --checkpoint-every 1
+    python -m repro.launch.train --model mlp --rounds 100 --ckpt-dir /tmp/ck --resume /tmp/ck
 """
 from __future__ import annotations
 
@@ -34,6 +41,8 @@ from repro.checkpoint import save_train_state
 from repro.configs import get_reduced_config
 from repro.core import topology as T
 from repro.core.commplan import FailureModel, compile_plan, compile_schedule, cyclic_map
+from repro.core.faults import SCENARIOS, scenario
+from repro.core.membership import membership_schedule
 from repro.core.initialisation import InitConfig, gain_from_graph
 from repro.data import (
     batch_index_schedule,
@@ -48,9 +57,11 @@ from repro.data import (
     token_batch_iterator,
 )
 from repro.fed import (
+    CheckpointPolicy,
     init_fl_state,
     make_eval_fn,
     make_round_fn,
+    run_elastic_trajectory,
     run_event_trajectory,
     run_trajectory,
     run_warmup_trajectory,
@@ -138,11 +149,36 @@ def main() -> None:
         "--legacy-loop", action="store_true",
         help="per-round dispatch via train_loop instead of the fused executor",
     )
+    p.add_argument(
+        "--elastic", action="store_true",
+        help="elastic membership executor (fed.run_elastic_trajectory, "
+        "DESIGN.md §16): nodes join/leave inside the static envelope; implied "
+        "by --join-nodes / --fault-scenario",
+    )
+    p.add_argument("--join-nodes", type=int, default=0,
+                   help="hold this many envelope slots out of the initial "
+                   "membership; they arrive at --join-round, re-derive n̂ via "
+                   "leaderless sketches, and initialise uncoordinated mid-run")
+    p.add_argument("--join-round", type=int, default=None,
+                   help="arrival round of the joining nodes (default: rounds // 2)")
+    p.add_argument("--join-warmup", type=int, default=8,
+                   help="estimation rounds between a node's arrival and its init")
+    p.add_argument("--fault-scenario", choices=sorted(SCENARIOS), default="none",
+                   help="deterministic fault injection (core.faults): correlated "
+                   "crash bursts, partitions, hub outages — seeded and replayable")
+    p.add_argument("--checkpoint-every", type=int, default=0,
+                   help="with --ckpt-dir: snapshot full mid-scan state every N "
+                   "chunks (preemption-safe; resume is bit-identical)")
+    p.add_argument("--resume", type=str, default=None,
+                   help="checkpoint dir or step file to resume the trajectory "
+                   "from (replays bit-identical params/metrics)")
     p.add_argument("--chunk-rounds", type=int, default=0, help="executor scan chunk size (0 = auto)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--ckpt-dir", type=str, default=None)
     p.add_argument("--history-out", type=str, default=None)
     args = p.parse_args()
+    if args.join_nodes > 0 or args.fault_scenario != "none":
+        args.elastic = True
     if args.uncoordinated_init and args.no_gain_correction:
         p.error("--uncoordinated-init estimates (and applies) per-node gains; "
                 "it contradicts --no-gain-correction — pick one")
@@ -156,6 +192,23 @@ def main() -> None:
             p.error("--async estimation is barrier-free leaderless sketching; "
                     "degree polling needs the round-based walker — drop "
                     "--estimate-mode degree or drop --async")
+    if args.elastic:
+        if args.async_gossip or args.arch or args.legacy_loop:
+            p.error("--elastic runs through the fused elastic executor — it "
+                    "excludes --async, --arch, and --legacy-loop")
+        if args.uncoordinated_init:
+            p.error("--elastic joiners already initialise uncoordinated from "
+                    "online n̂ sketches; initial members use the graph gain — "
+                    "drop --uncoordinated-init")
+        if not 0 <= args.join_nodes < args.nodes:
+            p.error(f"--join-nodes must leave at least one initial member "
+                    f"(got {args.join_nodes} of {args.nodes})")
+        if args.topology_schedule != "static" and "partition" in args.fault_scenario:
+            p.error("edge-cut fault scenarios index the base graph's edge list "
+                    "— they need --topology-schedule static")
+    if args.resume and args.uncoordinated_init and not args.async_gossip:
+        p.error("--resume is not supported through the fused warmup phase; "
+                "drop --uncoordinated-init (or resume an --elastic run)")
 
     n = args.nodes
     graph = build_graph(args.topology, n, args.seed)
@@ -236,6 +289,9 @@ def main() -> None:
     init_one = init_with(icfg)
     init_one_g = lambda k, gn: init_with(icfg.replace(gain=gn))(k)
     key = jax.random.PRNGKey(args.seed)
+    ckpt_policy = None
+    if args.ckpt_dir and args.checkpoint_every > 0:
+        ckpt_policy = CheckpointPolicy(args.ckpt_dir, every=args.checkpoint_every)
     # the async branch mixes pairwise through its own plan — don't compile a
     # round function (and its O(n²) dense operator) it would never call
     round_fn = (
@@ -333,9 +389,49 @@ def main() -> None:
             eval_batch=eval_batch, track_sigmas=True, chunk_size=args.chunk_rounds,
             b_local=args.local_batches,
         )
-        if estimate_fn is None:
+        if args.elastic:
+            join_round = args.join_round if args.join_round is not None else args.rounds // 2
+            if args.join_nodes:
+                mem = membership_schedule(
+                    n, args.rounds, initial=n - args.join_nodes,
+                    arrivals={join_round: list(range(n - args.join_nodes, n))},
+                    join_warmup=args.join_warmup,
+                )
+                print(
+                    f"membership: {n - args.join_nodes} initial, "
+                    f"{args.join_nodes} arrive at round {join_round} "
+                    f"(warmup {args.join_warmup})"
+                )
+            else:
+                mem = membership_schedule(n, args.rounds)
+            faults = (
+                None if args.fault_scenario == "none"
+                else scenario(args.fault_scenario, graph, args.rounds, seed=args.seed)
+            )
+            if faults is not None:
+                print(f"fault plan: {faults.name} "
+                      f"({(~faults.node_up).sum()} node-round outages, "
+                      f"{(~faults.edge_up).sum()} edge-round cuts)")
             state = init_fl_state(key, n, init_one, opt)
-            state, hist = run_trajectory(state, round_fn, xs, ys, sched, **common)
+            state, hist, aux = run_elastic_trajectory(
+                state, loss_fn, opt, mix_plan, mem, xs, ys, sched,
+                n_rounds=args.rounds, eval_every=eval_every, eval_fn=eval_fn,
+                eval_batch=eval_batch, chunk_size=args.chunk_rounds,
+                b_local=args.local_batches, init_one=init_one_g, faults=faults,
+                checkpoint=ckpt_policy, resume_from=args.resume,
+            )
+            for i, r in enumerate(hist["round"]):
+                print(
+                    f"round {r:4d} train {hist['train_loss'][i]:.4f} "
+                    f"test {hist['test_loss'][i]:.4f} "
+                    f"active {hist['n_active'][i]:3d}", flush=True,
+                )
+        elif estimate_fn is None:
+            state = init_fl_state(key, n, init_one, opt)
+            state, hist = run_trajectory(
+                state, round_fn, xs, ys, sched,
+                checkpoint=ckpt_policy, resume_from=args.resume, **common,
+            )
         else:
             # fused warmup: estimate → per-node gain → init → train is one program
             state, hist, gains = run_warmup_trajectory(
@@ -343,9 +439,12 @@ def main() -> None:
                 optimizer=opt, estimate_gains=estimate_fn, **common,
             )
             print(f"gossip gains: mean={gains.mean():.2f} min={gains.min():.2f} max={gains.max():.2f}")
-        for i, r in enumerate(hist["round"]):
-            print(f"round {r:4d} train {hist['train_loss'][i]:.4f} test {hist['test_loss'][i]:.4f}", flush=True)
-    if args.ckpt_dir:
+        if not args.elastic:
+            for i, r in enumerate(hist["round"]):
+                print(f"round {r:4d} train {hist['train_loss'][i]:.4f} test {hist['test_loss'][i]:.4f}", flush=True)
+    if args.ckpt_dir and ckpt_policy is None:
+        # legacy params-only snapshot; with --checkpoint-every the trajectory
+        # checkpoints own the directory (LATEST must stay resume-compatible)
         path = save_train_state(args.ckpt_dir, int(state.round), state.params, meta={"graph": graph.name})
         print(f"checkpoint: {path}")
     if args.history_out:

@@ -136,12 +136,24 @@ def test_event_padding_is_identity_and_mass_conserved():
     assert abs(float(x.sum()) - float(jnp.asarray(np.random.default_rng(3).normal(size=g.n), jnp.float32).sum())) < 1e-4
 
 
-def test_schedule_views_have_no_event_tables():
+def test_schedule_views_carry_event_tables():
+    """Event tables stack into the schedule envelope: a selected view's
+    pairwise event op matches the standalone plan's, and the schedule-level
+    time-dispatched op resolves the same window plan."""
     graphs = T.churn_sequence(T.random_k_regular(12, 4, seed=0), 2, 0.2, seed=1)
     sched = compile_schedule(graphs, backend="dense")
-    view = sched.select(0)
-    with pytest.raises(ValueError, match="event"):
-        view.event_mix(jnp.ones(12), 0)
+    x = jnp.asarray(np.random.default_rng(7).normal(size=(12, 3)), jnp.float32)
+    for w in (0, 1):
+        plan = compile_plan(graphs[w], backend="dense")
+        for e in (0, plan.n_edges - 1, -1):
+            np.testing.assert_array_equal(
+                np.asarray(sched.select(w).event_mix(x, e)),
+                np.asarray(plan.event_mix(x, e)),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(sched.event_spread(x, e, w + 0.5)),
+                np.asarray(plan.event_spread(x, e)),
+            )
 
 
 # --------------------------------------------------- engine vs numpy reference

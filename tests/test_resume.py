@@ -1,0 +1,165 @@
+"""Preemption-safe trajectories: SIGKILL mid-scan, resume bit-identically.
+
+The contract (DESIGN.md §16): the executor snapshots its full mid-scan
+carry (params, opt state, PRNG keys, data cursors, metric buffers) at chunk
+boundaries, and ``resume_from=`` replays the remaining chunks so that
+params AND recorded metrics are bit-identical to the uninterrupted run —
+across a real process boundary, with the interruption a real ``SIGKILL``
+(no atexit, no flush, no goodbye).  This is what makes ``FaultPlan``
+preemption scenarios invisible in the trajectory.
+"""
+import os
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import topology as T
+from repro.core.commplan import compile_plan
+from repro.core.initialisation import InitConfig
+from repro.core.membership import membership_schedule
+from repro.data import batch_index_schedule, mnist_like, node_datasets
+from repro.fed import CheckpointPolicy, init_fl_state, run_elastic_trajectory
+from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
+from repro.optim import sgd
+
+CHILD = r"""
+import sys
+import numpy as np
+import jax
+
+from repro.core import topology as T
+from repro.core.commplan import compile_plan
+from repro.core.initialisation import InitConfig
+from repro.data import batch_index_schedule, mnist_like, node_datasets
+from repro.fed import (
+    CheckpointPolicy,
+    init_fl_state,
+    make_eval_fn,
+    make_round_fn,
+    run_event_trajectory,
+    run_trajectory,
+)
+from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
+from repro.optim import sgd
+
+kind, mode, ckpt_dir, out = sys.argv[1:5]
+N, PER, BS, BL, R = 6, 32, 8, 2, 12
+ds = mnist_like(N * PER + 64, seed=0)
+parts = [np.arange(i * PER, (i + 1) * PER) for i in range(N)]
+xs, ys = node_datasets(ds, parts)
+test = (ds.x[-64:], ds.y[-64:])
+loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
+opt = sgd(1e-3, 0.5)
+init_one = lambda k: init_mlp(InitConfig("he_normal", 2.0), k, hidden=(16,))
+plan = compile_plan(T.ring(N))
+eval_fn = make_eval_fn(loss_fn)
+state = init_fl_state(jax.random.PRNGKey(0), N, init_one, opt)
+
+# kill: die (SIGKILL, no cleanup) right after chunk 0's checkpoint lands
+policy = None if mode == "ref" else CheckpointPolicy(
+    ckpt_dir, every=1, kill_after=0 if mode == "kill" else -1
+)
+resume = ckpt_dir if mode == "resume" else None
+
+if kind == "traj":
+    sched = batch_index_schedule(PER, N, BS, R * BL, seed=0)
+    rf = make_round_fn(loss_fn, opt, plan)
+    state, hist = run_trajectory(
+        state, rf, xs, ys, sched, n_rounds=R, eval_every=3, eval_fn=eval_fn,
+        eval_batch=test, track_sigmas=True, chunk_size=4,
+        checkpoint=policy, resume_from=resume,
+    )
+    cols = {k: np.asarray(v) for k, v in hist.items()}
+else:
+    horizon = 6.0
+    stream = T.poisson_event_stream(plan.graph, horizon=horizon, rate=1.0, seed=2)
+    sched = batch_index_schedule(PER, N, BS, int(horizon) * BL, seed=0)
+    state, hist, aux = run_event_trajectory(
+        state, loss_fn, opt, plan, stream, xs, ys, sched, b_local=BL,
+        n_bins=6, eval_fn=eval_fn, eval_batch=test, chunk_events=16,
+        checkpoint=policy, resume_from=resume,
+    )
+    cols = {k: np.asarray(v) for k, v in hist.items()}
+    cols["node_clock"] = aux["node_clock"]
+
+leaves = {f"p{i}": np.asarray(l) for i, l in enumerate(jax.tree_util.tree_leaves(state))}
+np.savez(out, **leaves, **{f"h_{k}": v for k, v in cols.items()})
+"""
+
+
+def _spawn(script, *argv):
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, script, *argv], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+
+
+def _assert_npz_bit_equal(a_path, b_path):
+    a, b = np.load(a_path), np.load(b_path)
+    assert sorted(a.files) == sorted(b.files)
+    for k in a.files:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+@pytest.mark.parametrize("kind", ["traj", "event"])
+def test_sigkill_and_resume_bit_parity(kind, tmp_path):
+    """Reference run vs (run → SIGKILL after chunk 0 → resume from LATEST):
+    params, metric history, and aux must be bit-identical."""
+    script = str(tmp_path / "child.py")
+    with open(script, "w") as f:
+        f.write(CHILD)
+    ckpt = str(tmp_path / "ckpts")
+
+    ref = _spawn(script, kind, "ref", ckpt, str(tmp_path / "ref.npz"))
+    assert ref.returncode == 0, ref.stderr
+
+    killed = _spawn(script, kind, "kill", ckpt, str(tmp_path / "never.npz"))
+    assert killed.returncode == -signal.SIGKILL, (killed.returncode, killed.stderr)
+    assert not os.path.exists(tmp_path / "never.npz")  # it really died mid-run
+    assert os.path.exists(os.path.join(ckpt, "LATEST"))
+
+    res = _spawn(script, kind, "resume", ckpt, str(tmp_path / "res.npz"))
+    assert res.returncode == 0, res.stderr
+    _assert_npz_bit_equal(tmp_path / "ref.npz", tmp_path / "res.npz")
+
+
+def test_elastic_resume_in_process_bit_parity(tmp_path):
+    """The elastic carry (params, opt state, PRNG, n̂ sketches) checkpoints
+    and resumes bit-identically too — here in-process, across two calls."""
+    N, PER, BS, BL, R = 6, 32, 8, 2, 12
+    ds = mnist_like(N * PER + 64, seed=0)
+    parts = [np.arange(i * PER, (i + 1) * PER) for i in range(N)]
+    xs, ys = node_datasets(ds, parts)
+    loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
+    opt = sgd(1e-3, 0.5)
+    icfg = InitConfig("he_normal", 2.0)
+    init_one = lambda k: init_mlp(icfg, k, hidden=(16,))
+    init_one_g = lambda k, gn: init_mlp(icfg.replace(gain=gn), k, hidden=(16,))
+    sched = batch_index_schedule(PER, N, BS, R * BL, seed=0)
+    plan = compile_plan(T.ring(N))
+    mem = membership_schedule(N, R, initial=N - 1, arrivals={1: [N - 1]}, join_warmup=3)
+    kw = dict(n_rounds=R, eval_every=3, chunk_size=4, init_one=init_one_g)
+
+    s0 = init_fl_state(jax.random.PRNGKey(3), N, init_one, opt)
+    ref, h_ref, _ = run_elastic_trajectory(s0, loss_fn, opt, plan, mem, xs, ys, sched, **kw)
+
+    d = str(tmp_path / "el")
+    s1 = init_fl_state(jax.random.PRNGKey(3), N, init_one, opt)
+    run_elastic_trajectory(s1, loss_fn, opt, plan, mem, xs, ys, sched,
+                           checkpoint=CheckpointPolicy(d, every=1), **kw)
+    s2 = init_fl_state(jax.random.PRNGKey(3), N, init_one, opt)
+    # resume from the mid-run snapshot (chunk 1 of 3), not the final one
+    got, h_got, _ = run_elastic_trajectory(
+        s2, loss_fn, opt, plan, mem, xs, ys, sched,
+        resume_from=os.path.join(d, "step_00000001.ckpt"), **kw,
+    )
+    for a, b in zip(jax.tree_util.tree_leaves(ref), jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert h_ref == h_got
