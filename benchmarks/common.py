@@ -37,6 +37,52 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     print(row, flush=True)
 
 
+class ChunkTimer:
+    """Wall-clock per executor chunk via the ``on_chunk`` hook.
+
+    Separates jit compile from steady-state throughput: the first chunk's
+    wall carries compilation, later equal-size chunks measure the pure
+    per-round (or per-event) cost.  A single ``total / rounds`` average
+    conflates the two — compile is O(1) while the steady rate is what
+    scales, so the conflated number misranks backends at small round
+    counts.  ``split()`` returns ``(compile_seconds, steady_sec_per_item)``
+    with compile = first-chunk wall minus its steady prediction, clamped
+    at 0; a single-chunk run can't separate them and reports compile 0.
+    """
+
+    def __init__(self):
+        self.t0 = time.time()
+        self.walls: list[float] = []
+        self.sizes: list[int] = []
+
+    def __call__(self, *args):
+        # run_trajectory-style hooks pass (r0, r1, hist); the event executor
+        # passes (ci, i0, i1, acc) — either way the bounds lead.  The payload
+        # may still be in flight (the event path hands over device buffers):
+        # block, or the wall would measure dispatch instead of compute.
+        for leaf in jax.tree_util.tree_leaves(args[-1]):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+        now = time.time()
+        lo, hi = (args[0], args[1]) if len(args) == 3 else (args[1], args[2])
+        self.walls.append(now - self.t0)
+        self.sizes.append(int(hi) - int(lo))
+        self.t0 = now
+
+    def split(self) -> tuple[float, float]:
+        if not self.walls:
+            return 0.0, 0.0
+        full = self.sizes[0]
+        # a trailing short chunk recompiles (new scan length) — exclude it
+        steady_samples = [
+            w / s for w, s in zip(self.walls[1:], self.sizes[1:]) if s == full
+        ]
+        if not steady_samples:
+            return 0.0, self.walls[0] / max(full, 1)
+        steady = float(np.median(steady_samples))
+        return max(self.walls[0] - steady * full, 0.0), steady
+
+
 def _mlp_setup(n_nodes, graph, per_node, hidden, optimizer, seed, test_size):
     """Shared dataset/model/optimizer setup for the MLP benchmark runs."""
     graph = graph if graph is not None else T.complete(n_nodes)
@@ -71,6 +117,7 @@ def run_dfl_mlp(
     aggregate: bool = True,
     test_size: int = 512,
     executor: bool = True,
+    timing: bool = False,
 ):
     """One DFL run of the paper's MLP config on MNIST-like data.
 
@@ -78,8 +125,13 @@ def run_dfl_mlp(
     takes the legacy per-round ``train_loop`` (the BENCH_rounds baseline).
     ``plan`` overrides the mixing operator (a compiled ``CommPlan`` or a
     time-varying ``PlanSchedule``) while ``graph`` keeps describing the
-    dataset/gain anchor.  Returns (history, seconds_per_round).
+    dataset/gain anchor.  Returns (history, seconds_per_round) — or, with
+    ``timing=True`` (fused executor only), (history, timing_dict) where the
+    dict splits the conflated average into ``compile_seconds`` and
+    ``us_per_round_steady`` via :class:`ChunkTimer`.
     """
+    if timing and not executor:
+        raise ValueError("timing split needs the fused executor (chunk hook)")
     graph, xs, ys, test, loss_fn, opt, eval_fn, init_one = _mlp_setup(
         n_nodes, graph, per_node, hidden, optimizer, seed, test_size
     )
@@ -93,10 +145,12 @@ def run_dfl_mlp(
     t0 = time.time()
     if executor:
         sched = batch_index_schedule(per_node, n_nodes, batch_size, rounds * b_local, seed=seed)
+        timer = ChunkTimer() if timing else None
         state, hist = run_trajectory(
             state, rf, xs, ys, sched, n_rounds=rounds, eval_every=eval_every,
             eval_fn=eval_fn, eval_batch=test, track_sigmas=track_sigmas,
-            b_local=b_local,
+            b_local=b_local, chunk_size=max(rounds // 8, 1) if timing else 0,
+            on_chunk=timer,
         )
     else:
         def batches():
@@ -113,6 +167,13 @@ def run_dfl_mlp(
             eval_fn=eval_fn, eval_batch=test, track_sigmas=track_sigmas,
         )
     sec_per_round = (time.time() - t0) / rounds
+    if timing:
+        compile_s, steady = timer.split()
+        return hist, {
+            "sec_per_round": sec_per_round,
+            "compile_seconds": compile_s,
+            "us_per_round_steady": steady * 1e6,
+        }
     return hist, sec_per_round
 
 
@@ -180,12 +241,15 @@ def run_dfl_mlp_async(
     node_p: float = 1.0,
     seed: int = 0,
     test_size: int = 512,
+    timing: bool = False,
 ):
     """One event-driven DFL run of the paper's MLP config: per-edge Poisson
     clocks at ``rate`` over ``horizon`` units of virtual time, executed as
     one scanned program (``fed.executor.run_event_trajectory``).  Rate 1
     with ``horizon = R`` is the message-budget-matched peer of R synchronous
-    rounds.  Returns (history, seconds_per_event, stream).
+    rounds.  Returns (history, seconds_per_event, stream); with
+    ``timing=True`` the middle element is instead a dict splitting the
+    average into ``compile_seconds`` and ``us_per_event_steady``.
     """
     from repro.core.commplan import FailureModel, compile_plan
 
@@ -200,11 +264,21 @@ def run_dfl_mlp_async(
         per_node, n_nodes, batch_size, max(int(horizon), 1) * b_local, seed=seed
     )
     t0 = time.time()
+    timer = ChunkTimer() if timing else None
     _, hist, _ = run_event_trajectory(
         state, loss_fn, opt, plan, stream, xs, ys, sched,
         b_local=b_local, n_bins=n_bins, eval_fn=eval_fn, eval_batch=test,
+        chunk_events=max(stream.n_events // 8, 1) if timing else 0,
+        on_chunk=timer,
     )
     sec_per_event = (time.time() - t0) / max(stream.n_events, 1)
+    if timing:
+        compile_s, steady = timer.split()
+        return hist, {
+            "sec_per_event": sec_per_event,
+            "compile_seconds": compile_s,
+            "us_per_event_steady": steady * 1e6,
+        }, stream
     return hist, sec_per_event, stream
 
 

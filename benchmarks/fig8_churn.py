@@ -17,7 +17,12 @@ a static graph.  This benchmark (DESIGN.md §13) measures what the
 Schema (``BENCH_churn.json``): ``{device, cpu_count, quick, records: [
 {family, n, k_plans, churn_rate, rounds, sec_per_round_static,
 sec_per_round_schedule, overhead_vs_static, ...}]}`` — validated by
-``tools/check_bench.py`` in CI.
+``tools/check_bench.py`` in CI.  The envelope row also carries the
+``ChunkTimer`` compile/steady split (``compile_seconds_*`` +
+``us_per_round_steady_*``); the committed artifact is quick-mode so the
+CI bench-regression gate diffs like against like (a full-mode committed
+copy would never identity-match the quick regeneration, silently
+disabling the timing gate).
 """
 from __future__ import annotations
 
@@ -97,34 +102,44 @@ def run(quick: bool = True) -> None:
     sched = _schedule(base, 8, 0.1)
 
     def timed(plan):
-        best = float("inf")
+        best = None
         for _ in range(2):
-            _, spr = run_dfl_mlp(
+            _, t = run_dfl_mlp(
                 n_nodes=n_big, graph=base, plan=plan, rounds=big_rounds,
-                eval_every=0, per_node=64,
+                eval_every=0, per_node=64, timing=True,
             )
-            best = min(best, spr)
+            if best is None or t["us_per_round_steady"] < best["us_per_round_steady"]:
+                best = t
         return best
 
-    spr_st = timed(None)  # graph → auto backend = sparse at this n
-    spr_sc = timed(sched)
+    t_st = timed(None)  # graph → auto backend = sparse at this n
+    t_sc = timed(sched)
     rec = {
         "family": "kreg",
         "n": n_big,
         "k_plans": 8,
         "churn_rate": 0.1,
         "rounds": big_rounds,
-        "sec_per_round_static": spr_st,
-        "sec_per_round_schedule": spr_sc,
-        "overhead_vs_static": spr_sc / spr_st,
+        "sec_per_round_static": t_st["sec_per_round"],
+        "sec_per_round_schedule": t_sc["sec_per_round"],
+        "us_per_round_steady_static": t_st["us_per_round_steady"],
+        "us_per_round_steady_schedule": t_sc["us_per_round_steady"],
+        "compile_seconds_static": t_st["compile_seconds"],
+        "compile_seconds_schedule": t_sc["compile_seconds"],
+        # the acceptance ratio gates steady throughput only — the conflated
+        # sec_per_round_* walls (kept for continuity) fold compile in and
+        # overstate the schedule's cost at small round counts
+        "overhead_vs_static": t_sc["us_per_round_steady"] / t_st["us_per_round_steady"],
         "config": "envelope_sparse",
     }
     records.append(rec)
     emit(
         f"fig8.envelope_n{n_big}_k8",
-        spr_sc * 1e6,
+        rec["us_per_round_steady_schedule"],
         f"overhead={rec['overhead_vs_static']:.2f}x;"
-        f"static_us={spr_st * 1e6:.0f};schedule_us={spr_sc * 1e6:.0f}",
+        f"static_us={rec['us_per_round_steady_static']:.0f};"
+        f"schedule_us={rec['us_per_round_steady_schedule']:.0f};"
+        f"compile_s={rec['compile_seconds_schedule']:.1f}",
     )
 
     OUT.write_text(

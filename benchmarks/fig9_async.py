@@ -54,13 +54,13 @@ def run(quick: bool = True) -> None:
         for n in sizes:
             graph = build(n, 0)
             m = graph.n_edges
-            hist_sync, spr_sync = run_dfl_mlp(
+            hist_sync, t_sync = run_dfl_mlp(
                 n_nodes=n, graph=graph, rounds=rounds, per_node=per_node,
-                eval_every=max(rounds // 10, 1),
+                eval_every=max(rounds // 10, 1), timing=True,
             )
-            hist_ev, spe, stream = run_dfl_mlp_async(
+            hist_ev, t_ev, stream = run_dfl_mlp_async(
                 n_nodes=n, graph=graph, horizon=float(rounds), rate=1.0,
-                per_node=per_node, n_bins=10,
+                per_node=per_node, n_bins=10, timing=True,
             )
             rec = {
                 "family": family,
@@ -73,8 +73,16 @@ def run(quick: bool = True) -> None:
                 "final_test_loss_sync": hist_sync["test_loss"][-1],
                 "final_test_loss_event": hist_ev["test_loss"][-1],
                 "mean_staleness": float(np.mean(hist_ev["staleness"])),
-                "us_per_event": spe * 1e6,
-                "sec_per_round_sync": spr_sync,
+                "us_per_event": t_ev["sec_per_event"] * 1e6,
+                "us_per_event_steady": t_ev["us_per_event_steady"],
+                "compile_seconds_event": t_ev["compile_seconds"],
+                "sec_per_round_sync": t_sync["sec_per_round"],
+                "us_per_round_steady_sync": t_sync["us_per_round_steady"],
+                "compile_seconds_sync": t_sync["compile_seconds"],
+                # bytes-on-the-wire (repro.obs.wirecost): clean sync plans are
+                # constant per round; the event total sums delivered exchanges
+                "wire_bytes_per_round_sync": hist_sync["wire_bytes"][0],
+                "wire_bytes_event_total": int(sum(hist_ev["wire_bytes"])),
             }
             records.append(rec)
             emit(

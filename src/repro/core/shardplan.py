@@ -358,10 +358,11 @@ class ShardedCommPlan:
         the recv block of source shard q lands at rows ``nps + q*h_max``."""
         if layout.h_max == 0 or self.n_shards == 1:
             return x
-        buf = jnp.take(x, t["send"][0], axis=0)  # (S, h_max, ...)
-        recv = jax.lax.all_to_all(buf, self.axis, split_axis=0, concat_axis=0)
-        halo = recv.reshape((self.n_shards * layout.h_max,) + x.shape[1:])
-        return jnp.concatenate([x, halo], axis=0)
+        with jax.named_scope("halo_exchange"):
+            buf = jnp.take(x, t["send"][0], axis=0)  # (S, h_max, ...)
+            recv = jax.lax.all_to_all(buf, self.axis, split_axis=0, concat_axis=0)
+            halo = recv.reshape((self.n_shards * layout.h_max,) + x.shape[1:])
+            return jnp.concatenate([x, halo], axis=0)
 
     def _masks(self, key: jax.Array) -> tuple[jax.Array, jax.Array]:
         """The plan's global failure draw, replicated on every shard: same

@@ -15,7 +15,10 @@ trajectory (DESIGN.md §11):
   iterator for the same seed).
 * **on-device metrics** — periodic eval / σ_an/σ_ap are computed inside the
   scan under ``lax.cond`` and written to fixed-size per-round output
-  buffers; the host touches them once, after the last chunk.
+  buffers; the host touches them once, after the last chunk.  The channels
+  route through ``repro.obs`` (``MetricsSpec``/``Recorder``, DESIGN.md §17)
+  — bit-identical to the hand-rolled outs they replaced — and every
+  executor reports per-round wire cost (messages / bytes) alongside loss.
 * **sweep axis** — ``run_sweep`` vmaps the whole scanned trajectory over a
   leading run axis (seeds × gains × ...), so a figure's grid of trajectories
   compiles to a handful of programs.
@@ -46,10 +49,21 @@ from repro.checkpoint.io import restore_train_state, save_train_state
 from repro.core.commplan import CommPlan, PlanSchedule, compile_plan
 from repro.core.shardplan import ShardedCommPlan, _shard_map
 from repro.core.topology import EventStream, Graph
+from repro.obs.health import staleness_histogram
+from repro.obs.spec import BinChannel, BinSpec, Channel, MetricsSpec, Recorder
+from repro.obs.wirecost import (
+    make_wire_fn,
+    param_row_bytes,
+    sharded_wire_per_round,
+    static_wire_messages,
+)
 
 from .trainer import DFLState, _local_steps, init_fl_state, make_round_fn, sigma_metrics
 
 PyTree = Any
+
+# staleness-histogram buckets of the event executor (linear over [0, horizon])
+_STALE_BUCKETS = 16
 
 __all__ = [
     "CheckpointPolicy",
@@ -215,12 +229,22 @@ def _build_chunk_fn(
     *,
     sweep: bool = False,
     schedule_mapped: bool = False,
+    wire_fn=None,
 ):
     """Compile-once chunk executor: (state, sched_chunk, mask_chunk) →
-    (state, per-round metric buffers)."""
+    (state, per-round metric buffers).
+
+    The buffers are the :class:`repro.obs.Recorder`'s channels — the legacy
+    train/eval/σ set (bit-identical to the hand-rolled outs this replaced)
+    plus, when ``wire_fn`` is given, the round's delivered-message count
+    traced from the same ``k_mix`` the round consumes.  Returns
+    ``(jitted chunk, donate, raw chunk, recorder)``.
+    """
     n_nodes = xs.shape[0]
     node_idx = jnp.arange(n_nodes)[:, None]
-    n_extra = (1 if eval_fn is not None else 0) + (2 if track_sigmas else 0)
+    rec = Recorder(
+        MetricsSpec.legacy(eval_fn is not None, track_sigmas, wire=wire_fn is not None)
+    )
 
     def gather_batch(idx: jax.Array):
         # idx (n, b, bs) → ((n, b, bs, *feat), (n, b, bs))
@@ -229,8 +253,8 @@ def _build_chunk_fn(
         by = ys[node_idx, flat].reshape(idx.shape)
         return bx, by
 
-    def eval_metrics(params):
-        vals = []
+    def gated_metrics(params):
+        vals = {}
         if eval_fn is not None:
             # Barriers keep the eval subgraph isolated from the round body so
             # it compiles like train_loop's standalone eval_fn.  XLA still
@@ -240,25 +264,27 @@ def _build_chunk_fn(
             # optimization_barrier has no vmap batching rule, so the swept
             # path goes without.
             barrier = (lambda x: x) if sweep else jax.lax.optimization_barrier
-            per_node = barrier(eval_fn(barrier(params), eval_batch))
-            vals.append(jnp.mean(per_node).astype(jnp.float32))
+            with jax.named_scope("dfl_eval"):
+                per_node = barrier(eval_fn(barrier(params), eval_batch))
+            vals["test_loss"] = jnp.mean(per_node).astype(jnp.float32)
         if track_sigmas:
             s = sigma_metrics(params)
-            vals += [s["sigma_ap"].astype(jnp.float32), s["sigma_an"].astype(jnp.float32)]
-        return tuple(vals)
-
-    def skip_metrics(params):
-        del params
-        return tuple(jnp.float32(jnp.nan) for _ in range(n_extra))
+            vals["sigma_ap"] = s["sigma_ap"].astype(jnp.float32)
+            vals["sigma_an"] = s["sigma_an"].astype(jnp.float32)
+        return vals
 
     def body(state, per_round):
         idx, do_eval = per_round
+        values = {}
+        if wire_fn is not None:
+            # replay the round's k_mix split before round_fn re-derives and
+            # consumes it — pure bookkeeping, no PRNG stream is advanced
+            _, k_mix = jax.random.split(state.rng)
+            values["wire_messages"] = wire_fn(k_mix, state.round)
         state, metrics = round_fn(state, gather_batch(idx))
-        if n_extra:
-            extra = jax.lax.cond(do_eval, eval_metrics, skip_metrics, state.params)
-        else:
-            extra = ()
-        return state, (metrics["train_loss"].astype(jnp.float32), *extra)
+        values["train_loss"] = metrics["train_loss"].astype(jnp.float32)
+        out = rec.step(values, gate=do_eval, gated_fn=gated_metrics, operand=state.params)
+        return state, out
 
     def chunk_inner(state, sched_chunk, mask_chunk):
         return jax.lax.scan(body, state, (sched_chunk, mask_chunk))
@@ -274,28 +300,16 @@ def _build_chunk_fn(
     # ``run_warmup_sweep``) can inline it after their estimation/init
     # prologues — the sweep re-vmaps the whole prologue+chunk composite.
     donate = jax.default_backend() != "cpu"
-    return jax.jit(chunk, donate_argnums=(0,) if donate else ()), donate, chunk_inner
+    return jax.jit(chunk, donate_argnums=(0,) if donate else ()), donate, chunk_inner, rec
 
 
-def _empty_history() -> dict[str, list]:
-    return {"round": [], "train_loss": [], "test_loss": [], "sigma_ap": [], "sigma_an": []}
-
-
-def _assemble_history(
-    mask: np.ndarray, cols: Sequence[np.ndarray], has_eval: bool, track_sigmas: bool
-) -> dict[str, list]:
-    """Per-round device buffers → train_loop-compatible history dict."""
-    rounds = np.nonzero(mask)[0]
-    hist = _empty_history()
-    hist["round"] = [int(r) for r in rounds]
-    hist["train_loss"] = [float(v) for v in cols[0][rounds]]
-    i = 1
-    if has_eval:
-        hist["test_loss"] = [float(v) for v in cols[i][rounds]]
-        i += 1
-    if track_sigmas:
-        hist["sigma_ap"] = [float(v) for v in cols[i][rounds]]
-        hist["sigma_an"] = [float(v) for v in cols[i + 1][rounds]]
+def _finish_wire(hist: dict, wire_static, row_bytes: int) -> dict:
+    """Attach the clean-path static message counts (no device buffer ever
+    existed for them) and derive bytes-on-the-wire = messages × row bytes."""
+    if wire_static is not None:
+        hist["wire_messages"] = [int(wire_static[r]) for r in hist["round"]]
+    if "wire_messages" in hist:
+        hist["wire_bytes"] = [int(m) * row_bytes for m in hist["wire_messages"]]
     return hist
 
 
@@ -303,6 +317,7 @@ def _drive_chunks(
     chunk_fn, state, sched_d, mask_np, cfg, *,
     round_axis: int = 0, donate: bool = False, skip: int = 0, head_outs=(),
     checkpoint: CheckpointPolicy | None = None, ckpt_meta: dict | None = None,
+    on_chunk=None,
 ):
     """Run the chunk schedule; one host sync, after the last chunk.
 
@@ -314,6 +329,11 @@ def _drive_chunks(
     alongside the batch schedule).  With a ``checkpoint`` policy the carry
     and accumulated metric buffers snapshot at chunk boundaries — syncing
     the carry to host is the checkpoint's cost, paid only on saving chunks.
+
+    ``on_chunk(ci, r0, r1, out)`` fires after every chunk call with the
+    chunk's device metric buffers — the streaming/telemetry hook.  Reading
+    them costs only that chunk's host transfer (the same one the final
+    assembly would pay); without the hook nothing syncs until the end.
     """
     if donate:
         # first chunk call would otherwise donate (delete) the caller's state
@@ -328,6 +348,8 @@ def _drive_chunks(
         )
         state, out = chunk_fn(state, sched_c, mask_d[r0:r1])
         outs.append(out)
+        if on_chunk is not None:
+            on_chunk(ci, r0, r1, out)
         if checkpoint is not None:
             _save_chunk_ckpt(
                 checkpoint, ci, ci == len(chunks) - 1, state, outs, ckpt_meta or {}
@@ -355,6 +377,8 @@ def run_trajectory(
     b_local: int | None = None,
     checkpoint: CheckpointPolicy | None = None,
     resume_from: str | None = None,
+    plan: CommPlan | PlanSchedule | None = None,
+    on_chunk=None,
 ) -> tuple[DFLState, dict[str, list]]:
     """Run a full trajectory fused on device.  Drop-in for ``train_loop``:
     same ``round_fn``, same history dict, bit-identical results — minus the
@@ -371,16 +395,45 @@ def run_trajectory(
     contract, subprocess-kill-tested), because each chunk is a pure function
     of the restored carry.  Pass the *same* initial ``state``/arguments as
     the original run; with no checkpoint on disk the run starts fresh.
+
+    Wire cost (DESIGN.md §17): the plan the round mixes over — read from
+    ``round_fn.plan`` (``make_round_fn`` attaches it) or passed as ``plan=``
+    — adds ``wire_messages`` / ``wire_bytes`` history channels.  Clean plans
+    cost nothing (static host-side counts); under an active failure model
+    the count is traced in-scan from the same ``k_mix`` the mix consumes.
+    Hand-rolled round_fns without a plan simply record no wire channels.
+
+    ``on_chunk(r0, r1, chunk_hist)`` streams each chunk's assembled history
+    slice as it lands (the ``--log-every`` hook) — the only added sync is
+    the chunk's own host transfer, paid early instead of at the end.
     """
     cfg = TrajectoryConfig(n_rounds, eval_every, track_sigmas, chunk_size)
     sched_d = jnp.asarray(_as_round_schedule(schedule, n_rounds, b_local))
     xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
     eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
-    chunk_fn, donate, _ = _build_chunk_fn(round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas)
+    eff_plan = plan if plan is not None else getattr(round_fn, "plan", None)
+    wire_fn, wire_static = None, None
+    if eff_plan is not None:
+        if eff_plan.failures.active:
+            wire_fn = make_wire_fn(eff_plan)
+        else:
+            wire_static = static_wire_messages(eff_plan, n_rounds)
+    row_bytes = param_row_bytes(state.params)
+    chunk_fn, donate, _, rec = _build_chunk_fn(
+        round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas, wire_fn=wire_fn
+    )
     meta_id = {
         "kind": "trajectory", "n_rounds": n_rounds, "eval_every": eval_every,
         "track_sigmas": track_sigmas, "chunk_size": cfg.chunk_size,
     }
+    mask_np = cfg.eval_mask()
+    hook = None
+    if on_chunk is not None:
+        def hook(ci, r0, r1, out):
+            del ci
+            h = rec.assemble(mask_np[r0:r1], [np.asarray(c) for c in out])
+            h["round"] = [r + r0 for r in h["round"]]
+            on_chunk(r0, r1, _finish_wire(h, wire_static, row_bytes))
     skip, head_outs = 0, ()
     if resume_from is not None:
         resumed = _load_resume(resume_from, meta_id)
@@ -389,10 +442,11 @@ def run_trajectory(
             state = _restore_carry(state, payload)
             head_outs = [tuple(np.asarray(c) for c in o) for o in payload["outs"]]
     state, cols = _drive_chunks(
-        chunk_fn, state, sched_d, cfg.eval_mask(), cfg, donate=donate,
+        chunk_fn, state, sched_d, mask_np, cfg, donate=donate,
         skip=skip, head_outs=head_outs, checkpoint=checkpoint, ckpt_meta=meta_id,
+        on_chunk=hook,
     )
-    hist = _assemble_history(cfg.eval_mask(), cols, eval_fn is not None, track_sigmas)
+    hist = _finish_wire(rec.assemble(mask_np, cols), wire_static, row_bytes)
     return state, hist
 
 
@@ -534,7 +588,10 @@ def run_sharded_trajectory(
         jnp.asarray(mask_np), xs_d, ys_d, tables,
     )
     cols = [np.asarray(m) for m in metrics]
-    hist = _assemble_history(mask_np, cols, has_eval, track_sigmas)
+    # halo wire cost is a plan static (the cross-shard row set never changes
+    # round to round), so the channels are host-side constants — no buffer
+    rec = Recorder(MetricsSpec.legacy(has_eval, track_sigmas))
+    hist = rec.assemble(mask_np, cols, constants=sharded_wire_per_round(plan, state.params))
     final = DFLState(
         params=params, opt_state=opt_state,
         round=state.round + jnp.int32(n_rounds), rng=rng,
@@ -560,6 +617,7 @@ def run_event_trajectory(
     chunk_events: int = 0,
     checkpoint: CheckpointPolicy | None = None,
     resume_from: str | None = None,
+    on_chunk=None,
 ) -> tuple[DFLState, dict[str, list], dict[str, np.ndarray]]:
     """Event-driven (asynchronous) DFL trajectory: no global round barrier.
 
@@ -636,6 +694,22 @@ def run_event_trajectory(
     failures_active = plan.failures.active
     rng, base_key = jax.random.split(state.rng)
 
+    # per-bin accumulators riding the scan carry (repro.obs.BinSpec): sums /
+    # counts per wall-time bin, the set-style eval slot, and a fixed-width
+    # staleness histogram over [0, horizon] (last bucket catches the tail)
+    bin_spec = BinSpec(
+        n_bins,
+        (
+            BinChannel("loss_sum"),
+            BinChannel("cnt"),
+            BinChannel("stale_sum"),
+            BinChannel("msg_cnt"),
+            BinChannel("test_bin", fill=float("nan")),
+            BinChannel("stale_hist", width=_STALE_BUCKETS),
+        ),
+    )
+    horizon = float(stream.horizon)
+
     def body(carry, inp):
         params, opt_state, counts, clocks, acc = carry
         i, e, t, b, do_ev = inp
@@ -682,19 +756,22 @@ def run_event_trajectory(
         stale = (t - clocks[uv]).mean()
         clocks = clocks.at[uv].set(jnp.where(liv, t, clocks[uv]))
         counts = counts.at[uv].add(jnp.where(liv, 1, 0))
-        loss_sum, cnt, stale_sum, msg_cnt, test_bin = acc
-        loss_sum = loss_sum.at[b].add(loss_pair.mean() * livf)
-        stale_sum = stale_sum.at[b].add(stale * livf)
-        cnt = cnt.at[b].add(livf)
-        msg_cnt = msg_cnt.at[b].add(2.0 * delivered.astype(jnp.float32))
+        acc = dict(acc)
+        acc["loss_sum"] = acc["loss_sum"].at[b].add(loss_pair.mean() * livf)
+        acc["stale_sum"] = acc["stale_sum"].at[b].add(stale * livf)
+        acc["cnt"] = acc["cnt"].at[b].add(livf)
+        acc["msg_cnt"] = acc["msg_cnt"].at[b].add(2.0 * delivered.astype(jnp.float32))
+        sb = jnp.clip(
+            (stale / horizon * _STALE_BUCKETS).astype(jnp.int32), 0, _STALE_BUCKETS - 1
+        )
+        acc["stale_hist"] = acc["stale_hist"].at[sb].add(livf)
         if eval_fn is not None:
-            test_bin = jax.lax.cond(
+            acc["test_bin"] = jax.lax.cond(
                 do_ev,
                 lambda tb: tb.at[b].set(jnp.mean(eval_fn(params, eval_d)).astype(jnp.float32)),
                 lambda tb: tb,
-                test_bin,
+                acc["test_bin"],
             )
-        acc = (loss_sum, cnt, stale_sum, msg_cnt, test_bin)
         return (params, opt_state, counts, clocks, acc), None
 
     @jax.jit
@@ -702,13 +779,12 @@ def run_event_trajectory(
         carry, _ = jax.lax.scan(body, carry, inp)
         return carry
 
-    zeros = jnp.zeros(n_bins, jnp.float32)
     carry = (
         state.params,
         state.opt_state,
         jnp.zeros(n_nodes, jnp.int32),
         jnp.zeros(n_nodes, jnp.float32),
-        (zeros, zeros, zeros, zeros, jnp.full(n_bins, jnp.nan, jnp.float32)),
+        bin_spec.init(),
     )
     inp_all = (
         jnp.arange(env, dtype=jnp.int32),
@@ -732,22 +808,27 @@ def run_event_trajectory(
     for ci in range(skip, len(bounds)):
         i0, i1 = bounds[ci]
         carry = drive_chunk(carry, tuple(a[i0:i1] for a in inp_all))
+        if on_chunk is not None:
+            on_chunk(ci, i0, i1, carry[4])
         if checkpoint is not None:
             _save_chunk_ckpt(checkpoint, ci, ci == len(bounds) - 1, carry, [], meta_id)
-    params, opt_state, counts, clocks, (loss_sum, cnt, stale_sum, msg_cnt, test_bin) = carry
-    cnt_np = np.asarray(cnt)
+    params, opt_state, counts, clocks, acc = carry
+    cnt_np = np.asarray(acc["cnt"])
     safe = np.maximum(cnt_np, 1.0)
     width = stream.horizon / n_bins
+    row_bytes = param_row_bytes(state.params)
+    messages = [int(v) for v in np.asarray(acc["msg_cnt"])]
     hist = {
         "bin": list(range(n_bins)),
         "time": [float((b + 1) * width) for b in range(n_bins)],
-        "train_loss": [float(v) for v in np.asarray(loss_sum) / safe],
-        "test_loss": [float(v) for v in np.asarray(test_bin)],
-        "staleness": [float(v) for v in np.asarray(stale_sum) / safe],
+        "train_loss": [float(v) for v in np.asarray(acc["loss_sum"]) / safe],
+        "test_loss": [float(v) for v in np.asarray(acc["test_bin"])],
+        "staleness": [float(v) for v in np.asarray(acc["stale_sum"]) / safe],
         "events": [int(v) for v in cnt_np],
         # delivered messages only: an exchange the failure draw killed moved
         # no model, so it spends none of the budget fig9 normalises by
-        "messages": [int(v) for v in np.asarray(msg_cnt)],
+        "messages": messages,
+        "wire_bytes": [m * row_bytes for m in messages],
     }
     final = DFLState(
         params=params,
@@ -755,7 +836,11 @@ def run_event_trajectory(
         round=state.round + jnp.int32(stream.n_events),
         rng=rng,
     )
-    aux = {"node_clock": np.asarray(clocks), "node_events": np.asarray(counts)}
+    aux = {
+        "node_clock": np.asarray(clocks),
+        "node_events": np.asarray(counts),
+        "staleness_hist": staleness_histogram(acc["stale_hist"], horizon),
+    }
     return final, hist, aux
 
 
@@ -781,6 +866,7 @@ def run_elastic_trajectory(
     faults=None,
     checkpoint: CheckpointPolicy | None = None,
     resume_from: str | None = None,
+    on_chunk=None,
 ) -> tuple[DFLState, dict[str, list], dict[str, np.ndarray]]:
     """Elastic-membership fused trajectory: nodes join, leave, crash — the
     static-envelope rendering of DESIGN.md §16.
@@ -834,7 +920,7 @@ def run_elastic_trajectory(
             state, round_fn, xs, ys, schedule,
             n_rounds=n_rounds, eval_every=eval_every, eval_fn=eval_fn,
             eval_batch=eval_batch, chunk_size=chunk_size, b_local=b_local,
-            checkpoint=checkpoint, resume_from=resume_from,
+            checkpoint=checkpoint, resume_from=resume_from, on_chunk=on_chunk,
         )
         hist["n_active"] = [n_nodes] * len(hist["round"])
         return state, hist, {"n_hat": np.full(n_nodes, float(n_nodes))}
@@ -863,6 +949,17 @@ def run_elastic_trajectory(
     sketches0 = jax.random.exponential(
         jax.random.fold_in(k_fresh, n_rounds), (n_nodes, n_sketches)
     )
+
+    # wire accountant: same per-round key, membership and fault masks the
+    # mix consumes, so the count is exactly the delivered-edge set (§17)
+    wire_fn = make_wire_fn(plan)
+    channels = [Channel("train_loss")]
+    if eval_fn is not None:
+        channels.append(Channel("test_loss", gated=True))
+    channels.append(Channel("n_active", ints=True))
+    if wire_fn is not None:
+        channels.append(Channel("wire_messages", ints=True))
+    rec = Recorder(MetricsSpec(tuple(channels)))
 
     def per_node_where(cond, new, old):
         return jax.tree_util.tree_map(
@@ -930,16 +1027,20 @@ def run_elastic_trajectory(
         # 4. metrics over the live training population
         n_act = tr_eff.sum().astype(jnp.float32)
         safe = jnp.maximum(n_act, 1.0)
-        outs = [((losses * tr_eff).sum() / safe).astype(jnp.float32)]
-        if eval_fn is not None:
-            outs.append(jax.lax.cond(
-                do_eval,
-                lambda p: ((eval_fn(p, eval_d) * tr_eff).sum() / safe).astype(jnp.float32),
-                lambda p: jnp.float32(jnp.nan),
-                params,
-            ))
-        outs.append(n_act)
-        return (params, opt_state, rng, sketches), tuple(outs)
+        values = {
+            "train_loss": ((losses * tr_eff).sum() / safe).astype(jnp.float32),
+            "n_active": n_act,
+        }
+        if wire_fn is not None:
+            values["wire_messages"] = wire_fn(key, r, active=tr_eff, edge_live=eup)
+
+        def gated_metrics(p):
+            return {
+                "test_loss": ((eval_fn(p, eval_d) * tr_eff).sum() / safe).astype(jnp.float32)
+            }
+
+        out = rec.step(values, gate=do_eval, gated_fn=gated_metrics, operand=params)
+        return (params, opt_state, rng, sketches), out
 
     def chunk_inner(carry, sched_chunk, mask_chunk):
         def step(c, inp):
@@ -964,6 +1065,14 @@ def run_elastic_trajectory(
         "kind": "elastic", "n_rounds": n_rounds, "eval_every": eval_every,
         "chunk_size": cfg.chunk_size, "n_sketches": n_sketches,
     }
+    row_bytes = param_row_bytes(state.params)
+    hook = None
+    if on_chunk is not None:
+        def hook(ci, r0, r1, out):
+            del ci
+            h = rec.assemble(mask_np[r0:r1], [np.asarray(c) for c in out])
+            h["round"] = [r + r0 for r in h["round"]]
+            on_chunk(r0, r1, _finish_wire(h, None, row_bytes))
     skip, head_outs = 0, ()
     if resume_from is not None:
         resumed = _load_resume(resume_from, meta_id)
@@ -974,17 +1083,10 @@ def run_elastic_trajectory(
     carry, cols = _drive_chunks(
         chunk_fn, carry, sched_tuple, mask_np, cfg,
         skip=skip, head_outs=head_outs, checkpoint=checkpoint, ckpt_meta=meta_id,
+        on_chunk=hook,
     )
     params, opt_state, rng, sketches = carry
-    rounds_sel = np.nonzero(mask_np)[0]
-    hist = {
-        "round": [int(r) for r in rounds_sel],
-        "train_loss": [float(v) for v in cols[0][rounds_sel]],
-        "test_loss": (
-            [float(v) for v in cols[1][rounds_sel]] if eval_fn is not None else []
-        ),
-        "n_active": [int(v) for v in cols[-1][rounds_sel]],
-    }
+    hist = _finish_wire(rec.assemble(mask_np, cols), None, row_bytes)
     final = DFLState(
         params=params, opt_state=opt_state,
         round=state.round + jnp.int32(n_rounds), rng=rng,
@@ -1036,7 +1138,7 @@ def run_warmup_trajectory(
     sched_d = jnp.asarray(_as_round_schedule(schedule, n_rounds, b_local))
     xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
     eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
-    chunk_fn, _, chunk_raw = _build_chunk_fn(
+    chunk_fn, _, chunk_raw, rec = _build_chunk_fn(
         round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas
     )
 
@@ -1058,7 +1160,7 @@ def run_warmup_trajectory(
     state, cols = _drive_chunks(
         chunk_fn, state, sched_d, mask_np, cfg, skip=1, head_outs=[out]
     )
-    hist = _assemble_history(mask_np, cols, eval_fn is not None, track_sigmas)
+    hist = rec.assemble(mask_np, cols)
     return state, hist, np.asarray(gains)
 
 
@@ -1116,7 +1218,7 @@ def run_warmup_sweep(
     sched_d = jnp.asarray(sched)
     xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
     eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
-    chunk_fn, _, chunk_inner = _build_chunk_fn(
+    chunk_fn, _, chunk_inner, rec = _build_chunk_fn(
         round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas,
         sweep=True, schedule_mapped=schedule_per_run,
     )
@@ -1150,10 +1252,7 @@ def run_warmup_sweep(
         chunk_fn, states, sched_d, mask_np, cfg,
         round_axis=axis, skip=1, head_outs=[out],
     )
-    hists = [
-        _assemble_history(mask_np, [c[i] for c in cols], eval_fn is not None, track_sigmas)
-        for i in range(n_runs)
-    ]
+    hists = [rec.assemble(mask_np, [c[i] for c in cols]) for i in range(n_runs)]
     return states, hists, np.asarray(gains)
 
 
@@ -1194,7 +1293,7 @@ def run_sweep(
     sched_d = jnp.asarray(sched)
     xs_d, ys_d = jnp.asarray(xs), jnp.asarray(ys)
     eval_d = None if eval_batch is None else jax.tree_util.tree_map(jnp.asarray, eval_batch)
-    chunk_fn, donate, _ = _build_chunk_fn(
+    chunk_fn, donate, _, rec = _build_chunk_fn(
         round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas,
         sweep=True, schedule_mapped=schedule_per_run,
     )
@@ -1203,8 +1302,5 @@ def run_sweep(
         round_axis=1 if schedule_per_run else 0, donate=donate,
     )
     mask = cfg.eval_mask()
-    hists = [
-        _assemble_history(mask, [c[i] for c in cols], eval_fn is not None, track_sigmas)
-        for i in range(n_runs)
-    ]
+    hists = [rec.assemble(mask, [c[i] for c in cols]) for i in range(n_runs)]
     return state, hists

@@ -135,22 +135,27 @@ def make_round_fn(
     def round_fn(state: DFLState, node_batches: Any) -> tuple[DFLState, dict]:
         rng, k_mix = jax.random.split(state.rng)
 
-        params, opt_state, losses = jax.vmap(
-            partial(_local_steps, loss_fn, optimizer)
-        )(state.params, state.opt_state, node_batches)
+        with jax.named_scope("dfl_local"):
+            params, opt_state, losses = jax.vmap(
+                partial(_local_steps, loss_fn, optimizer)
+            )(state.params, state.opt_state, node_batches)
 
         if aggregate:
             key = k_mix if plan.failures.active else None
-            if scheduled:
-                params = plan.mix(params, state.round, key)
-            else:
-                params = plan.mix(params, key=key)
+            with jax.named_scope("dfl_mix"):
+                if scheduled:
+                    params = plan.mix(params, state.round, key)
+                else:
+                    params = plan.mix(params, key=key)
             if reinit_opt:  # Algorithm 1 line 15
                 opt_state = jax.vmap(optimizer.init)(params)
 
         new_state = DFLState(params=params, opt_state=opt_state, round=state.round + 1, rng=rng)
         return new_state, {"train_loss": losses.mean(), "train_loss_per_node": losses}
 
+    # the *effective* plan (overrides applied) — the executor's wire-cost
+    # accountant reads it to count exactly the edges this round_fn mixes over
+    round_fn.plan = plan if aggregate else None
     return round_fn
 
 

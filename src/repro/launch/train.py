@@ -31,8 +31,10 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
+import sys
 
 import jax
 import numpy as np
@@ -40,7 +42,7 @@ import numpy as np
 from repro.checkpoint import save_train_state
 from repro.configs import get_reduced_config
 from repro.core import topology as T
-from repro.core.commplan import FailureModel, compile_plan, compile_schedule, cyclic_map
+from repro.core.commplan import CommPlan, FailureModel, compile_plan, compile_schedule, cyclic_map
 from repro.core.faults import SCENARIOS, scenario
 from repro.core.membership import membership_schedule
 from repro.core.initialisation import InitConfig, gain_from_graph
@@ -73,6 +75,7 @@ from repro.gossip import (
     make_gain_estimator,
 )
 from repro.models import transformer as TF
+from repro.obs import gossip_health, history_rows, profile_trace, run_manifest, write_run_log
 from repro.models.paper_models import classifier_loss, cnn_forward, init_cnn, init_mlp, init_vgg16, mlp_forward, vgg16_forward
 from repro.optim import adamw, sgd
 
@@ -176,6 +179,19 @@ def main() -> None:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--ckpt-dir", type=str, default=None)
     p.add_argument("--history-out", type=str, default=None)
+    p.add_argument("--telemetry", type=str, default=None,
+                   help="write a JSONL run log — manifest, one record per "
+                   "recorded round/bin, summary, gossip health (repro.obs, "
+                   "DESIGN.md §17)")
+    p.add_argument("--profile-trace", type=str, default=None,
+                   help="capture a jax.profiler trace of the run into this "
+                   "directory (named_scope phases: dfl_local / dfl_mix / "
+                   "dfl_eval / halo_exchange)")
+    p.add_argument("--log-every", type=int, default=0,
+                   help="stream recorded metrics every N rounds at chunk "
+                   "boundaries instead of printing after the run (fused "
+                   "executors; sets the chunk size unless --chunk-rounds is "
+                   "given — no extra device syncs beyond the chunk transfer)")
     args = p.parse_args()
     if args.join_nodes > 0 or args.fault_scenario != "none":
         args.elastic = True
@@ -300,6 +316,25 @@ def main() -> None:
         else make_round_fn(loss_fn, opt, mix_plan, link_p=args.link_p, node_p=args.node_p)
     )
     eval_every = max(1, args.rounds // 20)
+    if args.log_every > 0 and not args.chunk_rounds:
+        args.chunk_rounds = args.log_every
+
+    def stream_rows(r0, r1, h):
+        # fires at chunk boundaries with the chunk's assembled history slice
+        del r0, r1
+        for i, r in enumerate(h["round"]):
+            line = f"round {r:4d} train {h['train_loss'][i]:.4f}"
+            if h.get("test_loss"):
+                line += f" test {h['test_loss'][i]:.4f}"
+            if h.get("n_active"):
+                line += f" active {h['n_active'][i]:3d}"
+            if h.get("wire_bytes"):
+                line += f" wire {h['wire_bytes'][i]}B"
+            print(line, flush=True)
+
+    stream_hook = stream_rows if args.log_every > 0 else None
+    profile_ctx = contextlib.ExitStack()
+    profile_ctx.enter_context(profile_trace(args.profile_trace))
     estimate_fn = None
     if args.uncoordinated_init and not args.async_gossip:
         # the async branch estimates with barrier-free leaderless sketches
@@ -419,18 +454,21 @@ def main() -> None:
                 eval_batch=eval_batch, chunk_size=args.chunk_rounds,
                 b_local=args.local_batches, init_one=init_one_g, faults=faults,
                 checkpoint=ckpt_policy, resume_from=args.resume,
+                on_chunk=stream_hook,
             )
-            for i, r in enumerate(hist["round"]):
-                print(
-                    f"round {r:4d} train {hist['train_loss'][i]:.4f} "
-                    f"test {hist['test_loss'][i]:.4f} "
-                    f"active {hist['n_active'][i]:3d}", flush=True,
-                )
+            if stream_hook is None:
+                for i, r in enumerate(hist["round"]):
+                    print(
+                        f"round {r:4d} train {hist['train_loss'][i]:.4f} "
+                        f"test {hist['test_loss'][i]:.4f} "
+                        f"active {hist['n_active'][i]:3d}", flush=True,
+                    )
         elif estimate_fn is None:
             state = init_fl_state(key, n, init_one, opt)
             state, hist = run_trajectory(
                 state, round_fn, xs, ys, sched,
-                checkpoint=ckpt_policy, resume_from=args.resume, **common,
+                checkpoint=ckpt_policy, resume_from=args.resume,
+                on_chunk=stream_hook, **common,
             )
         else:
             # fused warmup: estimate → per-node gain → init → train is one program
@@ -439,9 +477,11 @@ def main() -> None:
                 optimizer=opt, estimate_gains=estimate_fn, **common,
             )
             print(f"gossip gains: mean={gains.mean():.2f} min={gains.min():.2f} max={gains.max():.2f}")
-        if not args.elastic:
+        if not args.elastic and (stream_hook is None or estimate_fn is not None):
+            # the fused-warmup path has no chunk hook — it prints at the end
             for i, r in enumerate(hist["round"]):
                 print(f"round {r:4d} train {hist['train_loss'][i]:.4f} test {hist['test_loss'][i]:.4f}", flush=True)
+    profile_ctx.close()
     if args.ckpt_dir and ckpt_policy is None:
         # legacy params-only snapshot; with --checkpoint-every the trajectory
         # checkpoints own the directory (LATEST must stay resume-compatible)
@@ -452,6 +492,39 @@ def main() -> None:
         with open(args.history_out, "w") as f:
             json.dump(hist, f, indent=1)
         print(f"history: {args.history_out}")
+    if args.telemetry:
+        records = [run_manifest(vars(args), seed=args.seed, argv=sys.argv[1:])]
+        records += history_rows(hist, kind="bin" if args.async_gossip else "round")
+        summary = {"kind": "summary", "rounds_run": int(state.round)}
+        if hist.get("train_loss"):
+            summary["final_train_loss"] = hist["train_loss"][-1]
+        if hist.get("test_loss"):
+            summary["final_test_loss"] = hist["test_loss"][-1]
+        if hist.get("wire_messages"):
+            summary["recorded_wire_messages"] = int(sum(hist["wire_messages"]))
+        elif hist.get("messages"):
+            summary["recorded_wire_messages"] = int(sum(hist["messages"]))
+        if hist.get("wire_bytes"):
+            summary["recorded_wire_bytes"] = int(sum(hist["wire_bytes"]))
+        records.append(summary)
+        # gossip-health fingerprint of the mixing operator actually used
+        if args.async_gossip:
+            health_plan = plan
+        elif round_fn is not None:
+            health_plan = getattr(round_fn, "plan", None)
+        else:
+            health_plan = None
+        if isinstance(health_plan, CommPlan):
+            hk = (
+                jax.random.PRNGKey(args.seed + 17)
+                if health_plan.failures.active else None
+            )
+            records.append({
+                "kind": "gossip_health",
+                **gossip_health(health_plan, rounds=min(64, max(16, 2 * n)), key=hk),
+            })
+        n_rec = write_run_log(args.telemetry, records)
+        print(f"telemetry: {args.telemetry} ({n_rec} records)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,180 @@
+"""Typed metric channels for the fused executors (DESIGN.md §17).
+
+A :class:`MetricsSpec` names the per-round channels one executor records;
+the :class:`Recorder` turns them into the executor's scan-out tuple (one
+fixed float32 buffer per channel, donation-safe — the buffers are plain
+scan ``ys``) and assembles the host history after the final chunk's single
+sync.  ``gated`` channels are computed under one ``lax.cond`` on the round's
+eval mask with a NaN skip branch — exactly the structure the hand-rolled
+executor outs used, so the legacy channels stay **bit-identical**.
+
+:class:`BinSpec` is the event-driven sibling: named fixed-width accumulator
+buffers that ride the event scan's *carry* (per-wall-time-bin sums/counts
+and set-style slots) instead of per-step outs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BinChannel", "BinSpec", "Channel", "MetricsSpec", "Recorder"]
+
+# every history dict carries these keys (empty when unrecorded) — the
+# train_loop drop-in contract the executors inherit
+BASE_KEYS = ("round", "train_loss", "test_loss", "sigma_ap", "sigma_an")
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    """One named per-round scalar channel.
+
+    ``gated`` channels follow the eval cadence (``lax.cond``-gated, NaN on
+    gated-off rounds); ungated channels record every round.  On device every
+    channel is a float32 scalar; ``ints`` only controls the host-side
+    rendering in the assembled history.
+    """
+
+    name: str
+    gated: bool = False
+    ints: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsSpec:
+    """Ordered channel registry of one executor's per-round outs."""
+
+    channels: tuple[Channel, ...]
+
+    def __post_init__(self):
+        names = [c.name for c in self.channels]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate channel names: {names}")
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(c.name for c in self.channels)
+
+    @property
+    def gated(self) -> tuple[Channel, ...]:
+        return tuple(c for c in self.channels if c.gated)
+
+    @classmethod
+    def legacy(
+        cls,
+        has_eval: bool,
+        track_sigmas: bool,
+        *,
+        wire: bool = False,
+    ) -> "MetricsSpec":
+        """The executors' historical channel set in the historical order —
+        the Recorder emits bit-identical buffers for these channels; the
+        ``wire`` channel (delivered message count) appends after them."""
+        ch = [Channel("train_loss")]
+        if has_eval:
+            ch.append(Channel("test_loss", gated=True))
+        if track_sigmas:
+            ch += [Channel("sigma_ap", gated=True), Channel("sigma_an", gated=True)]
+        if wire:
+            ch.append(Channel("wire_messages", ints=True))
+        return cls(tuple(ch))
+
+
+class Recorder:
+    """Spec-ordered channel recording inside a scanned round body.
+
+    ``step`` builds one round's out tuple; ``assemble`` converts the
+    concatenated per-round buffers back into the train_loop-compatible
+    history dict.  The per-round buffers are ordinary scan outputs, so
+    buffer donation of the carry is untouched and the host syncs exactly
+    once, after the last chunk.
+    """
+
+    def __init__(self, spec: MetricsSpec):
+        self.spec = spec
+
+    def step(self, values: dict, gate=None, gated_fn=None, operand=None) -> tuple:
+        """One round's out tuple in spec order (float32 scalars).
+
+        ``values`` holds the ungated channel values; the gated channels are
+        computed as ``gated_fn(operand) -> dict`` under ONE ``lax.cond`` on
+        ``gate`` with a NaN skip branch — the legacy executors' exact
+        structure, which is what keeps the refactor bit-identical.
+        """
+        out = dict(values)
+        gated = self.spec.gated
+        if gated:
+
+            def on_eval(op):
+                d = gated_fn(op)
+                return tuple(jnp.asarray(d[c.name]).astype(jnp.float32) for c in gated)
+
+            def skip(op):
+                del op
+                return tuple(jnp.float32(jnp.nan) for _ in gated)
+
+            vals = jax.lax.cond(gate, on_eval, skip, operand)
+            out.update({c.name: v for c, v in zip(gated, vals)})
+        missing = [c.name for c in self.spec.channels if c.name not in out]
+        if missing:
+            raise ValueError(f"round body did not provide channels {missing}")
+        return tuple(jnp.asarray(out[c.name]).astype(jnp.float32) for c in self.spec.channels)
+
+    def assemble(
+        self,
+        mask: np.ndarray,
+        cols,
+        constants: dict | None = None,
+    ) -> dict[str, list]:
+        """(n_rounds,) per-channel buffers → history dict at the recorded
+        rounds.  ``constants`` adds host-side per-round-constant channels
+        (e.g. the clean-path wire cost) without a device buffer."""
+        if len(cols) != len(self.spec.channels):
+            raise ValueError(
+                f"{len(cols)} metric buffers for {len(self.spec.channels)} channels"
+            )
+        rounds = np.nonzero(np.asarray(mask))[0]
+        hist: dict[str, list] = {k: [] for k in BASE_KEYS}
+        hist["round"] = [int(r) for r in rounds]
+        for c, col in zip(self.spec.channels, cols):
+            vals = np.asarray(col)[rounds]
+            hist[c.name] = [int(v) if c.ints else float(v) for v in vals]
+        for name, value in (constants or {}).items():
+            hist[name] = [value] * len(rounds)
+        return hist
+
+
+@dataclasses.dataclass(frozen=True)
+class BinChannel:
+    """One named accumulator buffer of an event scan's carry.
+
+    ``width`` 0 means the spec's ``n_bins``; ``fill`` is the initial buffer
+    value (0 for sum-style channels, NaN for set-style slots).
+    """
+
+    name: str
+    width: int = 0
+    fill: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BinSpec:
+    """Named fixed-width accumulators for the event-driven executor."""
+
+    n_bins: int
+    channels: tuple[BinChannel, ...]
+
+    def __post_init__(self):
+        names = [c.name for c in self.channels]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate bin channel names: {names}")
+
+    def init(self) -> dict[str, jax.Array]:
+        """Fresh accumulator pytree (a dict, stable under tree flattening)."""
+        return {
+            c.name: jnp.full((c.width or self.n_bins,), c.fill, jnp.float32)
+            for c in self.channels
+        }

@@ -1,0 +1,258 @@
+"""Render the committed BENCH_*.json artifacts — or one telemetry run log —
+into a static markdown / HTML dashboard.
+
+Two modes, both stdlib-only and **deterministic** (no timestamps, no
+environment probes): the output is a pure function of the input files, so
+CI can regenerate ``BENCH_REPORT.md`` from the committed artifacts and fail
+on any diff — the committed report can never drift from the committed
+numbers.
+
+* **bench** (``--bench DIR``): one section per artifact, every record as a
+  table row (identity columns first, then measurements), plus a headline
+  summary table with each artifact's primary timing per record identity —
+  the cross-PR trend view: diffing this report between commits shows every
+  timing/loss movement the bench suite measured.
+* **run** (``--run out.jsonl``): a single run's telemetry
+  (``launch/train.py --telemetry``) — manifest, per-round/bin history
+  table, summary and gossip-health records.
+
+Usage:
+    python tools/dashboard.py --bench . --out-md BENCH_REPORT.md
+    python tools/dashboard.py --bench . --out-html dashboard.html
+    python tools/dashboard.py --run /tmp/run.jsonl --out-html run.html
+"""
+from __future__ import annotations
+
+import argparse
+import html
+import json
+import pathlib
+import sys
+
+# committed artifact set, rendered in this order (missing ones are noted)
+BENCH_ORDER = (
+    "BENCH_mixing.json",
+    "BENCH_rounds.json",
+    "BENCH_estimates.json",
+    "BENCH_churn.json",
+    "BENCH_async.json",
+    "BENCH_scaling.json",
+    "BENCH_elastic.json",
+)
+
+# per-artifact headline timing field for the summary trend table, tried in
+# order (steady fields first — the compile/steady split's honest number)
+HEADLINE = (
+    "us_per_round_steady",
+    "us_per_event_steady",
+    "us_per_round_steady_schedule",
+    "us_per_round_steady_sync",
+    "us_per_round",
+    "us_per_event",
+    "us_dense",
+    "us_sparse",
+    "sec_executor",
+    "sec_per_round_schedule",
+    "sec_per_round",
+)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    if isinstance(v, (list, tuple)):
+        return f"[{len(v)} values]"
+    if isinstance(v, dict):
+        return f"{{{len(v)} keys}}"
+    return str(v)
+
+
+def _identity_label(rec: dict) -> str:
+    parts = [
+        f"{k}={v}"
+        for k, v in rec.items()
+        if isinstance(v, (str, bool)) or (isinstance(v, int) and k in ("n", "n_nodes", "n_shards", "rounds", "k_plans"))
+    ]
+    return " ".join(parts) if parts else "-"
+
+
+def _columns(records: list[dict]) -> list[str]:
+    """Stable column order: first record's key order, then later extras."""
+    cols: list[str] = []
+    for rec in records:
+        for k in rec:
+            if k not in cols:
+                cols.append(k)
+    # identity-ish columns (strings/bools) lead, measurements follow
+    ident = [c for c in cols if any(isinstance(r.get(c), (str, bool)) for r in records)]
+    return ident + [c for c in cols if c not in ident]
+
+
+def _md_table(headers: list[str], rows: list[list[str]]) -> list[str]:
+    out = ["| " + " | ".join(headers) + " |", "|" + "---|" * len(headers)]
+    out += ["| " + " | ".join(r) + " |" for r in rows]
+    return out
+
+
+def bench_sections(root: pathlib.Path) -> list[tuple[str, list[str]]]:
+    """(title, markdown lines) per section, from the artifacts under root."""
+    docs: dict[str, dict] = {}
+    for name in BENCH_ORDER:
+        path = root / name
+        if path.exists():
+            docs[name] = json.loads(path.read_text())
+
+    sections: list[tuple[str, list[str]]] = []
+    summary_rows: list[list[str]] = []
+    for name, doc in docs.items():
+        records = doc.get("records", [])
+        for rec in records:
+            field = next((f for f in HEADLINE if f in rec), None)
+            if field is not None:
+                summary_rows.append(
+                    [name.removeprefix("BENCH_").removesuffix(".json"),
+                     _identity_label(rec), field, _fmt(rec[field])]
+                )
+    lines = [
+        "Regenerate with `python tools/dashboard.py --bench . --out-md BENCH_REPORT.md`",
+        "— the output is deterministic, so CI diffs it against this committed copy.",
+        "",
+    ]
+    missing = [n for n in BENCH_ORDER if n not in docs]
+    if missing:
+        lines += ["Missing artifacts: " + ", ".join(missing), ""]
+    lines += _md_table(["suite", "identity", "field", "value"], summary_rows)
+    sections.append(("Headline timings", lines))
+
+    for name, doc in docs.items():
+        records = doc.get("records", [])
+        cols = _columns(records)
+        rows = [[_fmt(rec.get(c, "")) for c in cols] for rec in records]
+        meta = ", ".join(
+            f"{k}={_fmt(v)}" for k, v in doc.items() if not isinstance(v, (list, dict))
+        )
+        lines = [meta, ""] if meta else []
+        lines += _md_table(cols, rows)
+        sections.append((name.removeprefix("BENCH_").removesuffix(".json"), lines))
+    return sections
+
+
+def run_sections(path: pathlib.Path) -> list[tuple[str, list[str]]]:
+    """Sections for one telemetry run log (JSONL)."""
+    with path.open() as fh:
+        records = [json.loads(line) for line in fh if line.strip()]
+    by_kind: dict[str, list[dict]] = {}
+    for rec in records:
+        by_kind.setdefault(rec.get("kind", "?"), []).append(rec)
+
+    sections: list[tuple[str, list[str]]] = []
+    for man in by_kind.pop("manifest", []):
+        lines = _md_table(
+            ["key", "value"],
+            [[k, _fmt(v)] for k, v in man.items() if k not in ("kind", "config")],
+        )
+        cfg = man.get("config") or {}
+        interesting = {k: v for k, v in cfg.items() if v not in (None, False)}
+        if interesting:
+            lines += ["", "Config (non-default):", ""]
+            lines += _md_table(["option", "value"], [[k, _fmt(v)] for k, v in interesting.items()])
+        sections.append(("Manifest", lines))
+    for kind in ("round", "bin"):
+        rows = by_kind.pop(kind, [])
+        if not rows:
+            continue
+        cols = [c for c in _columns(rows) if c != "kind"]
+        table = [[_fmt(rec.get(c, "")) for c in cols] for rec in rows]
+        sections.append((f"History ({len(rows)} {kind} records)", _md_table(cols, table)))
+    for kind, rows in by_kind.items():
+        lines: list[str] = []
+        for rec in rows:
+            lines += _md_table(
+                ["key", "value"], [[k, _fmt(v)] for k, v in rec.items() if k != "kind"]
+            )
+            lines.append("")
+        sections.append((kind, lines))
+    return sections
+
+
+def to_markdown(title: str, sections: list[tuple[str, list[str]]]) -> str:
+    out = [f"# {title}", ""]
+    for heading, lines in sections:
+        out += [f"## {heading}", ""]
+        out += lines
+        out.append("")
+    return "\n".join(out).rstrip() + "\n"
+
+
+def to_html(title: str, sections: list[tuple[str, list[str]]]) -> str:
+    """Markdown-ish sections → a self-contained HTML page (tables only —
+    the report is tables and short paragraphs, no full markdown needed)."""
+    parts = [
+        "<!doctype html><html><head><meta charset='utf-8'>",
+        f"<title>{html.escape(title)}</title>",
+        "<style>body{font-family:sans-serif;margin:2em;max-width:72em}"
+        "table{border-collapse:collapse;margin:1em 0}"
+        "td,th{border:1px solid #bbb;padding:0.25em 0.6em;text-align:left;"
+        "font-size:0.85em}th{background:#eee}h2{margin-top:1.6em}</style>",
+        f"</head><body><h1>{html.escape(title)}</h1>",
+    ]
+    for heading, lines in sections:
+        parts.append(f"<h2>{html.escape(heading)}</h2>")
+        in_table = False
+        for line in lines:
+            bar = line.startswith("|") and line.endswith("|")
+            if bar and set(line) <= {"|", "-"}:
+                continue  # separator row
+            if bar:
+                cells = [c.strip() for c in line.strip("|").split("|")]
+                tag = "th" if not in_table else "td"
+                if not in_table:
+                    parts.append("<table>")
+                    in_table = True
+                parts.append(
+                    "<tr>" + "".join(f"<{tag}>{html.escape(c)}</{tag}>" for c in cells) + "</tr>"
+                )
+            else:
+                if in_table:
+                    parts.append("</table>")
+                    in_table = False
+                if line:
+                    parts.append(f"<p>{html.escape(line)}</p>")
+        if in_table:
+            parts.append("</table>")
+    parts.append("</body></html>")
+    return "\n".join(parts) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--bench", metavar="DIR", help="render the BENCH_*.json artifacts under DIR")
+    mode.add_argument("--run", metavar="JSONL", help="render one telemetry run log")
+    ap.add_argument("--out-md", metavar="PATH", default=None)
+    ap.add_argument("--out-html", metavar="PATH", default=None)
+    args = ap.parse_args()
+    if not args.out_md and not args.out_html:
+        ap.error("give --out-md and/or --out-html")
+
+    if args.bench:
+        title = "Bench dashboard"
+        sections = bench_sections(pathlib.Path(args.bench))
+        if len(sections) <= 1 and not sections[0][1]:
+            print(f"no BENCH_*.json under {args.bench}", file=sys.stderr)
+            return 1
+    else:
+        title = f"Run log: {pathlib.Path(args.run).name}"
+        sections = run_sections(pathlib.Path(args.run))
+
+    for out, render in ((args.out_md, to_markdown), (args.out_html, to_html)):
+        if out:
+            pathlib.Path(out).write_text(render(title, sections))
+            print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
