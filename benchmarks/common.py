@@ -118,6 +118,7 @@ def run_dfl_mlp(
     test_size: int = 512,
     executor: bool = True,
     timing: bool = False,
+    compression=None,
 ):
     """One DFL run of the paper's MLP config on MNIST-like data.
 
@@ -140,6 +141,7 @@ def run_dfl_mlp(
     rf = make_round_fn(
         loss_fn, opt, plan if plan is not None else graph,
         link_p=link_p, node_p=node_p, aggregate=aggregate,
+        compression=compression,
     )
 
     t0 = time.time()

@@ -27,6 +27,7 @@ from . import (
     fig9_async,
     fig10_scaling,
     fig11_elastic,
+    fig12_compress,
     kernels_bench,
     roofline_report,
     rounds_bench,
@@ -45,6 +46,7 @@ MODULES = {
     "fig9": fig9_async,
     "fig10": fig10_scaling,
     "fig11": fig11_elastic,
+    "fig12": fig12_compress,
     "kernels": kernels_bench,
     "roofline": roofline_report,
     "rounds": rounds_bench,

@@ -2,6 +2,7 @@
 and DecAvg aggregation for decentralised federated learning."""
 from . import (
     commplan,
+    compress,
     decavg,
     diffusion,
     faults,
@@ -22,6 +23,14 @@ from .commplan import (
     compile_schedule,
     cyclic_map,
     sequence_map,
+)
+from .compress import (
+    Compression,
+    compressed_mix,
+    compressed_mix_with,
+    compressed_spread,
+    init_residuals,
+    seed_residual,
 )
 from .decavg import (
     failure_receive_matrix,

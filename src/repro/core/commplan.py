@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .compress import Compression, compressed_mix, compressed_spread, init_residuals
 from .decavg import (
     mix_pytree,
     mix_pytree_colored,
@@ -161,8 +162,17 @@ class CommPlan:
         *,
         active: jax.Array | None = None,
         edge_live: jax.Array | None = None,
+        compression: Compression | None = None,
+        residual: PyTree | None = None,
     ) -> PyTree:
         """One DecAvg aggregation of a node-stacked pytree.
+
+        With ``compression`` (an active :class:`repro.core.compress
+        .Compression` codec) the round runs the error-feedback delta form
+        over this same operator and returns ``(mixed, new_residual)``
+        instead — thread ``residual`` from the previous round (omitted:
+        zeros).  Codec ``"none"``/``compression=None`` is the raw operator,
+        bit-identical to the uncompressed path.
 
         Jit-friendly: ``self`` is closed over as compile-time constants, only
         ``params``/``key``/masks are traced.  ``active`` ((n,) bool) and
@@ -178,6 +188,16 @@ class CommPlan:
         """
         if self.failures.active and key is None:
             raise ValueError("failure model active: mix() needs a PRNG key")
+        if compression is not None and compression.active:
+            return compressed_mix(
+                self,
+                params,
+                residual if residual is not None else init_residuals(params),
+                key,
+                compression=compression,
+                active=active,
+                edge_live=edge_live,
+            )
         if self.backend == "dense":
             return mix_pytree(self._dense_round_matrix(key, active, edge_live), params)
         if self.backend == "sparse":
@@ -204,8 +224,15 @@ class CommPlan:
         *,
         active: jax.Array | None = None,
         edge_live: jax.Array | None = None,
+        compression: Compression | None = None,
+        residual: jax.Array | None = None,
     ) -> jax.Array:
         """One *send-form* (column-stochastic) round: ``values ← Mᵀ values``.
+
+        With an active ``compression`` codec the round runs the delta form
+        ``v + Mᵀ C(v + r) − C(v + r)`` and returns ``(values, residual)`` —
+        mass-conserving for ANY codec because ``Mᵀ`` is column-stochastic
+        (see ``core.compress.compressed_spread``).
 
         ``mix`` applies the row-stochastic receive operator ``M`` (Eq. 2);
         ``spread`` applies its transpose — column-stochastic, hence
@@ -226,6 +253,18 @@ class CommPlan:
         """
         if self.failures.active and key is None:
             raise ValueError("failure model active: spread() needs a PRNG key")
+        if compression is not None and compression.active:
+            return compressed_spread(
+                self,
+                values,
+                residual if residual is not None else jnp.zeros(
+                    jnp.shape(values), jnp.float32
+                ),
+                key,
+                compression=compression,
+                active=active,
+                edge_live=edge_live,
+            )
         x = jnp.asarray(values, jnp.float32)
         squeeze = x.ndim == 1
         if squeeze:
@@ -954,12 +993,17 @@ class PlanSchedule:
         *,
         active: jax.Array | None = None,
         edge_live: jax.Array | None = None,
+        compression: Compression | None = None,
+        residual: PyTree | None = None,
     ) -> PyTree:
         """One DecAvg round under the plan active at ``round_index``.
         ``edge_live`` is read at the schedule's shared edge *envelope* width
-        (``n_edges_env``), indexed by the active plan's own edge uids."""
+        (``n_edges_env``), indexed by the active plan's own edge uids.
+        ``compression``/``residual`` follow ``CommPlan.mix``: an active
+        codec returns ``(mixed, new_residual)``."""
         return self.select(round_index).mix(
-            params, self.round_key(key, round_index), active=active, edge_live=edge_live
+            params, self.round_key(key, round_index), active=active,
+            edge_live=edge_live, compression=compression, residual=residual,
         )
 
     def spread(
@@ -970,10 +1014,13 @@ class PlanSchedule:
         *,
         active: jax.Array | None = None,
         edge_live: jax.Array | None = None,
+        compression: Compression | None = None,
+        residual: jax.Array | None = None,
     ) -> jax.Array:
         """One send-form (push) round under the active plan."""
         return self.select(round_index).spread(
-            values, self.round_key(key, round_index), active=active, edge_live=edge_live
+            values, self.round_key(key, round_index), active=active,
+            edge_live=edge_live, compression=compression, residual=residual,
         )
 
     def spread_min(

@@ -47,6 +47,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint.io import restore_train_state, save_train_state
 from repro.core.commplan import CommPlan, PlanSchedule, compile_plan
+from repro.core.compress import (
+    Compression,
+    compressed_mix,
+    compressed_mix_with,
+    init_residuals,
+    seed_residual,
+)
 from repro.core.shardplan import ShardedCommPlan, _shard_map
 from repro.core.topology import EventStream, Graph
 from repro.obs.health import staleness_histogram
@@ -250,7 +257,7 @@ def _build_chunk_fn(
         # idx (n, b, bs) → ((n, b, bs, *feat), (n, b, bs))
         flat = idx.reshape(n_nodes, -1)
         bx = xs[node_idx, flat].reshape(idx.shape + xs.shape[2:])
-        by = ys[node_idx, flat].reshape(idx.shape)
+        by = ys[node_idx, flat].reshape(idx.shape + ys.shape[2:])
         return bx, by
 
     def gated_metrics(params):
@@ -418,13 +425,21 @@ def run_trajectory(
             wire_fn = make_wire_fn(eff_plan)
         else:
             wire_static = static_wire_messages(eff_plan, n_rounds)
-    row_bytes = param_row_bytes(state.params)
+    # compressed round_fns (make_round_fn(compression=...)) carry their codec:
+    # the mirror seeds into the carry before the scan (static structure) and
+    # wire bytes price at the codec's encoding, not the raw itemsize
+    comp: Compression | None = getattr(round_fn, "compression", None)
+    state = seed_residual(state, comp)
+    row_bytes = param_row_bytes(
+        state.params, codec_bytes=comp.leaf_row_bytes if comp is not None else None
+    )
     chunk_fn, donate, _, rec = _build_chunk_fn(
         round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas, wire_fn=wire_fn
     )
     meta_id = {
         "kind": "trajectory", "n_rounds": n_rounds, "eval_every": eval_every,
         "track_sigmas": track_sigmas, "chunk_size": cfg.chunk_size,
+        "compressed": comp is not None,
     }
     mask_np = cfg.eval_mask()
     hook = None
@@ -466,6 +481,7 @@ def run_sharded_trajectory(
     track_sigmas: bool = False,
     reinit_opt: bool = True,
     b_local: int | None = None,
+    compression: Compression | None = None,
 ) -> tuple[DFLState, dict[str, list]]:
     """Node-sharded fused trajectory: the whole round loop inside ONE
     ``shard_map`` over the plan's node mesh axis (DESIGN.md §15).
@@ -489,6 +505,11 @@ def run_sharded_trajectory(
     ``plan`` must be a static ``ShardedCommPlan`` (``CommPlan.shard()``);
     schedules are not supported here.  ``eval_fn``/``eval_batch`` follow
     ``run_trajectory`` (the eval batch is replicated to every shard).
+
+    ``compression`` runs the error-feedback delta form around the halo-
+    exchange ``local_mix`` — mirrors are node-sharded exactly like params
+    (compression is a per-node-row transform, so it needs no collective of
+    its own), and the halo payload prices at the codec's encoding.
     """
     n_nodes = xs.shape[0]
     if plan.n != n_nodes:
@@ -503,6 +524,7 @@ def run_sharded_trajectory(
     failures_active = plan.failures.active
     mask_np = cfg.eval_mask()
     node_idx = jnp.arange(nps)[:, None]
+    comp = compression if (compression is not None and compression.active) else None
 
     def sharded_sigmas(params):
         # σ_ap: per-node moments are shard-local; σ_an needs cross-shard
@@ -523,16 +545,27 @@ def run_sharded_trajectory(
         return ap.astype(jnp.float32), (an_sum / d_total).astype(jnp.float32)
 
     def body(carry, per_round, xs_l, ys_l, t):
-        params, opt_state, rng = carry
+        if comp is not None:
+            params, opt_state, rng, mirror = carry
+        else:
+            (params, opt_state, rng), mirror = carry, None
         idx, do_eval = per_round  # idx: (nps, b, bs) local slice of the schedule
         rng, k_mix = jax.random.split(rng)
         flat = idx.reshape(nps, -1)
         bx = xs_l[node_idx, flat].reshape(idx.shape + xs_l.shape[2:])
-        by = ys_l[node_idx, flat].reshape(idx.shape)
+        by = ys_l[node_idx, flat].reshape(idx.shape + ys_l.shape[2:])
         params, opt_state, losses = jax.vmap(partial(_local_steps, loss_fn, optimizer))(
             params, opt_state, (bx, by)
         )
-        params = plan.local_mix_any(params, k_mix if failures_active else None, t)
+        key = k_mix if failures_active else None
+        if comp is not None:
+            # delta-form compressed halo mix: the mirror is shard-local (a
+            # per-node-row transform), only h' rides the halo exchange
+            params, mirror = compressed_mix_with(
+                lambda q: plan.local_mix_any(q, key, t), params, mirror, comp
+            )
+        else:
+            params = plan.local_mix_any(params, key, t)
         if reinit_opt:  # Algorithm 1 line 15
             opt_state = jax.vmap(optimizer.init)(params)
         metrics = [jax.lax.psum(losses.sum(), ax).astype(jnp.float32) / n]
@@ -550,13 +583,18 @@ def run_sharded_trajectory(
             nan = jnp.float32(jnp.nan)
             ap, an = sharded_sigmas(params)
             metrics += [jnp.where(do_eval, ap, nan), jnp.where(do_eval, an, nan)]
-        return (params, opt_state, rng), tuple(metrics)
+        new_carry = (
+            (params, opt_state, rng, mirror)
+            if comp is not None
+            else (params, opt_state, rng)
+        )
+        return new_carry, tuple(metrics)
 
-    def traj(params, opt_state, rng, sched, mask, xs_l, ys_l, t):
-        def step(carry, pr):
-            return body(carry, pr, xs_l, ys_l, t)
+    def traj(carry, sched, mask, xs_l, ys_l, t):
+        def step(c, pr):
+            return body(c, pr, xs_l, ys_l, t)
 
-        return jax.lax.scan(step, (params, opt_state, rng), (sched, mask))
+        return jax.lax.scan(step, carry, (sched, mask))
 
     pspecs = jax.tree_util.tree_map(
         lambda l: P(ax, *([None] * (l.ndim - 1))), state.params
@@ -566,35 +604,52 @@ def run_sharded_trajectory(
     )
     data_spec = lambda a: P(ax, *([None] * (a.ndim - 1)))  # noqa: E731
     n_metrics = 1 + int(has_eval) + 2 * int(track_sigmas)
+    if comp is not None:
+        carry0 = (
+            state.params, state.opt_state, state.rng,
+            state.residual if state.residual is not None
+            else init_residuals(state.params),
+        )
+        cspecs = (pspecs, ospecs, P(), pspecs)
+    else:
+        carry0 = (state.params, state.opt_state, state.rng)
+        cspecs = (pspecs, ospecs, P())
     f = _shard_map(
         traj,
         mesh=mesh,
         in_specs=(
-            pspecs,
-            ospecs,
-            P(),
+            cspecs,
             P(None, ax, None, None),
             P(),
             data_spec(xs_d),
             data_spec(ys_d),
             tab_specs,
         ),
-        out_specs=((pspecs, ospecs, P()), tuple(P() for _ in range(n_metrics))),
+        out_specs=(cspecs, tuple(P() for _ in range(n_metrics))),
         check_rep=False,  # scalar outs are psum-replicated; the static checker
         # can't always prove it through scan+cond on older jax
     )
-    (params, opt_state, rng), metrics = jax.jit(f)(
-        state.params, state.opt_state, state.rng, sched_d,
-        jnp.asarray(mask_np), xs_d, ys_d, tables,
+    carry, metrics = jax.jit(f)(
+        carry0, sched_d, jnp.asarray(mask_np), xs_d, ys_d, tables
     )
+    if comp is not None:
+        params, opt_state, rng, mirror = carry
+    else:
+        (params, opt_state, rng), mirror = carry, None
     cols = [np.asarray(m) for m in metrics]
     # halo wire cost is a plan static (the cross-shard row set never changes
     # round to round), so the channels are host-side constants — no buffer
     rec = Recorder(MetricsSpec.legacy(has_eval, track_sigmas))
-    hist = rec.assemble(mask_np, cols, constants=sharded_wire_per_round(plan, state.params))
+    hist = rec.assemble(
+        mask_np, cols,
+        constants=sharded_wire_per_round(
+            plan, state.params,
+            codec_bytes=comp.leaf_row_bytes if comp is not None else None,
+        ),
+    )
     final = DFLState(
         params=params, opt_state=opt_state,
-        round=state.round + jnp.int32(n_rounds), rng=rng,
+        round=state.round + jnp.int32(n_rounds), rng=rng, residual=mirror,
     )
     return final, hist
 
@@ -618,6 +673,7 @@ def run_event_trajectory(
     checkpoint: CheckpointPolicy | None = None,
     resume_from: str | None = None,
     on_chunk=None,
+    compression: Compression | None = None,
 ) -> tuple[DFLState, dict[str, list], dict[str, np.ndarray]]:
     """Event-driven (asynchronous) DFL trajectory: no global round barrier.
 
@@ -664,6 +720,12 @@ def run_event_trajectory(
     at chunk boundaries and a resumed run — fed the *same* initial
     ``state`` — replays the remaining events bit-identically (the per-event
     failure key stream re-derives from ``state.rng``, not from the carry).
+
+    ``compression`` compresses the *pairwise* exchange: the event's two
+    endpoints transmit ``C(x − h)``, update their carried mirrors, and
+    blend the mirrors — everyone else's rows (and an exchange the failure
+    draw killed) stay untouched, mirrors included, because a node that
+    transmitted nothing updated nobody's copy.
     """
     plan = compile_plan(plan) if isinstance(plan, Graph) else plan
     if plan.event_uv is None:
@@ -692,6 +754,7 @@ def run_event_trajectory(
 
     ep = plan.event_uv
     failures_active = plan.failures.active
+    comp = compression if (compression is not None and compression.active) else None
     rng, base_key = jax.random.split(state.rng)
 
     # per-bin accumulators riding the scan carry (repro.obs.BinSpec): sums /
@@ -711,7 +774,10 @@ def run_event_trajectory(
     horizon = float(stream.horizon)
 
     def body(carry, inp):
-        params, opt_state, counts, clocks, acc = carry
+        if comp is not None:
+            params, opt_state, counts, clocks, acc, mirror = carry
+        else:
+            (params, opt_state, counts, clocks, acc), mirror = carry, None
         i, e, t, b, do_ev = inp
         liv = e >= 0
         livf = liv.astype(jnp.float32)
@@ -738,7 +804,14 @@ def run_event_trajectory(
         # messages below), but the endpoints did wake and train.
         k = jax.random.fold_in(base_key, i) if failures_active else None
         delivered = (liv & plan.event_keep(k)) if failures_active else liv
-        params = plan.event_mix(params, e, k)
+        if comp is not None:
+            upd = jnp.zeros(n_nodes, bool).at[uv].set(delivered)
+            params, mirror = compressed_mix_with(
+                lambda q: plan.event_mix(q, e, k), params, mirror, comp,
+                update_mask=upd,
+            )
+        else:
+            params = plan.event_mix(params, e, k)
 
         # 3. pairwise optimizer-state reinit (Algorithm 1 line 15)
         if reinit_opt:
@@ -772,13 +845,15 @@ def run_event_trajectory(
                 lambda tb: tb,
                 acc["test_bin"],
             )
-        return (params, opt_state, counts, clocks, acc), None
+        out = (params, opt_state, counts, clocks, acc)
+        return (out + (mirror,) if comp is not None else out), None
 
     @jax.jit
     def drive_chunk(carry, inp):
         carry, _ = jax.lax.scan(body, carry, inp)
         return carry
 
+    state = seed_residual(state, comp)
     carry = (
         state.params,
         state.opt_state,
@@ -786,6 +861,8 @@ def run_event_trajectory(
         jnp.zeros(n_nodes, jnp.float32),
         bin_spec.init(),
     )
+    if comp is not None:
+        carry = carry + (state.residual,)
     inp_all = (
         jnp.arange(env, dtype=jnp.int32),
         jnp.asarray(stream.edges),
@@ -798,6 +875,7 @@ def run_event_trajectory(
     meta_id = {
         "kind": "event", "env": env, "n_bins": n_bins,
         "chunk_events": size, "reinit_opt": bool(reinit_opt),
+        "compressed": comp is not None,
     }
     skip = 0
     if resume_from is not None:
@@ -812,11 +890,16 @@ def run_event_trajectory(
             on_chunk(ci, i0, i1, carry[4])
         if checkpoint is not None:
             _save_chunk_ckpt(checkpoint, ci, ci == len(bounds) - 1, carry, [], meta_id)
-    params, opt_state, counts, clocks, acc = carry
+    if comp is not None:
+        params, opt_state, counts, clocks, acc, mirror = carry
+    else:
+        (params, opt_state, counts, clocks, acc), mirror = carry, None
     cnt_np = np.asarray(acc["cnt"])
     safe = np.maximum(cnt_np, 1.0)
     width = stream.horizon / n_bins
-    row_bytes = param_row_bytes(state.params)
+    row_bytes = param_row_bytes(
+        state.params, codec_bytes=comp.leaf_row_bytes if comp is not None else None
+    )
     messages = [int(v) for v in np.asarray(acc["msg_cnt"])]
     hist = {
         "bin": list(range(n_bins)),
@@ -835,6 +918,7 @@ def run_event_trajectory(
         opt_state=opt_state,
         round=state.round + jnp.int32(stream.n_events),
         rng=rng,
+        residual=mirror,
     )
     aux = {
         "node_clock": np.asarray(clocks),
@@ -867,6 +951,7 @@ def run_elastic_trajectory(
     checkpoint: CheckpointPolicy | None = None,
     resume_from: str | None = None,
     on_chunk=None,
+    compression: Compression | None = None,
 ) -> tuple[DFLState, dict[str, list], dict[str, np.ndarray]]:
     """Elastic-membership fused trajectory: nodes join, leave, crash — the
     static-envelope rendering of DESIGN.md §16.
@@ -898,6 +983,13 @@ def run_elastic_trajectory(
     Returns ``(final_state, history, aux)``: history rows at the eval mask
     with ``n_active`` alongside the losses; ``aux`` carries the final
     per-node n̂ from the carried sketches.
+
+    ``compression`` compresses the training mix exactly as in
+    ``make_round_fn``; only the *live training* population updates its
+    mirror each round (frozen / crashed nodes transmitted nothing, so
+    their peers' copies — and their own — stay put until they return).
+    Sketch min-exchanges stay uncompressed: they are O(n_sketches) floats,
+    not model payloads.
     """
     plan = compile_plan(plan) if isinstance(plan, Graph) else plan
     n_nodes = xs.shape[0]
@@ -915,7 +1007,9 @@ def run_elastic_trajectory(
             f"({n_rounds}, {n_nodes})"
         )
     if membership.trivial and trivial_faults:
-        round_fn = make_round_fn(loss_fn, optimizer, plan, reinit_opt=reinit_opt)
+        round_fn = make_round_fn(
+            loss_fn, optimizer, plan, reinit_opt=reinit_opt, compression=compression
+        )
         state, hist = run_trajectory(
             state, round_fn, xs, ys, schedule,
             n_rounds=n_rounds, eval_every=eval_every, eval_fn=eval_fn,
@@ -929,6 +1023,7 @@ def run_elastic_trajectory(
 
     scheduled = isinstance(plan, PlanSchedule)
     failures_active = plan.failures.active
+    comp = compression if (compression is not None and compression.active) else None
     has_inits = bool(membership.inits.any())
     cfg = TrajectoryConfig(n_rounds, eval_every, False, chunk_size)
     mask_np = cfg.eval_mask()
@@ -970,11 +1065,14 @@ def run_elastic_trajectory(
     def gather_batch(idx):
         flat = idx.reshape(n_nodes, -1)
         bx = xs_d[node_idx, flat].reshape(idx.shape + xs_d.shape[2:])
-        by = ys_d[node_idx, flat].reshape(idx.shape)
+        by = ys_d[node_idx, flat].reshape(idx.shape + ys_d.shape[2:])
         return bx, by
 
     def body(carry, per_round):
-        params, opt_state, rng, sketches = carry
+        if comp is not None:
+            params, opt_state, rng, sketches, mirror = carry
+        else:
+            (params, opt_state, rng, sketches), mirror = carry, None
         idx, tr_m, gs_m, jn, ini, nup, eup, r, do_eval = per_round
         tr_eff = tr_m & nup
         gs_eff = gs_m & nup
@@ -1015,9 +1113,18 @@ def run_elastic_trajectory(
         sketches = jnp.where(jn[:, None], fresh, sketches)
         if scheduled:
             sketches = plan.spread_min(sketches, r, key, active=gs_eff, edge_live=eup)
-            params = plan.mix(params, r, key, active=tr_eff, edge_live=eup)
         else:
             sketches = plan.spread_min(sketches, key, active=gs_eff, edge_live=eup)
+        if comp is not None:
+            # only live trainers transmitted → only their mirrors advance
+            params, mirror = compressed_mix(
+                plan, params, mirror, key, compression=comp,
+                round_index=r if scheduled else None,
+                active=tr_eff, edge_live=eup, update_mask=tr_eff,
+            )
+        elif scheduled:
+            params = plan.mix(params, r, key, active=tr_eff, edge_live=eup)
+        else:
             params = plan.mix(params, key, active=tr_eff, edge_live=eup)
         if reinit_opt:  # Algorithm 1 line 15, members only
             opt_state = per_node_where(
@@ -1040,7 +1147,8 @@ def run_elastic_trajectory(
             }
 
         out = rec.step(values, gate=do_eval, gated_fn=gated_metrics, operand=params)
-        return (params, opt_state, rng, sketches), out
+        new_carry = (params, opt_state, rng, sketches)
+        return (new_carry + (mirror,) if comp is not None else new_carry), out
 
     def chunk_inner(carry, sched_chunk, mask_chunk):
         def step(c, inp):
@@ -1060,12 +1168,18 @@ def run_elastic_trajectory(
         jnp.asarray(edge_up),
         jnp.arange(n_rounds, dtype=jnp.int32),
     )
+    state = seed_residual(state, comp)
     carry = (state.params, state.opt_state, state.rng, sketches0)
+    if comp is not None:
+        carry = carry + (state.residual,)
     meta_id = {
         "kind": "elastic", "n_rounds": n_rounds, "eval_every": eval_every,
         "chunk_size": cfg.chunk_size, "n_sketches": n_sketches,
+        "compressed": comp is not None,
     }
-    row_bytes = param_row_bytes(state.params)
+    row_bytes = param_row_bytes(
+        state.params, codec_bytes=comp.leaf_row_bytes if comp is not None else None
+    )
     hook = None
     if on_chunk is not None:
         def hook(ci, r0, r1, out):
@@ -1085,11 +1199,15 @@ def run_elastic_trajectory(
         skip=skip, head_outs=head_outs, checkpoint=checkpoint, ckpt_meta=meta_id,
         on_chunk=hook,
     )
-    params, opt_state, rng, sketches = carry
+    if comp is not None:
+        params, opt_state, rng, sketches, mirror = carry
+    else:
+        (params, opt_state, rng, sketches), mirror = carry, None
     hist = _finish_wire(rec.assemble(mask_np, cols), None, row_bytes)
     final = DFLState(
         params=params, opt_state=opt_state,
         round=state.round + jnp.int32(n_rounds), rng=rng,
+        residual=mirror,
     )
     n_hat = (n_sketches - 1) / np.maximum(np.asarray(sketches).sum(axis=1), 1e-30)
     return final, hist, {"n_hat": n_hat}
@@ -1142,11 +1260,14 @@ def run_warmup_trajectory(
         round_fn, xs_d, ys_d, eval_fn, eval_d, track_sigmas
     )
 
+    comp = getattr(round_fn, "compression", None)
+
     @jax.jit
     def warmup_chunk(k, sched_c, mask_c):
         k_est, k_init = jax.random.split(k)
         gains = estimate_gains(k_est)
         state = init_fl_state(k_init, n_nodes, init_one, optimizer, gains=gains)
+        state = seed_residual(state, comp)  # static scan-carry structure
         state, out = chunk_raw(state, sched_c, mask_c)
         return state, out, gains
 
@@ -1229,10 +1350,13 @@ def run_warmup_sweep(
         )
     b_arr = jnp.asarray(np.asarray(budgets if has_budget else np.zeros(n_runs)), jnp.int32)
 
+    comp = getattr(round_fn, "compression", None)
+
     def one(k, b, sched_c, mask_c):
         k_est, k_init = jax.random.split(k)
         gains = estimate_gains(k_est, b) if has_budget else estimate_gains(k_est)
         state = init_fl_state(k_init, n_nodes, init_one, optimizer, gains=gains)
+        state = seed_residual(state, comp)  # static scan-carry structure
         state, out = chunk_inner(state, sched_c, mask_c)
         return state, out, gains
 
@@ -1282,6 +1406,7 @@ def run_sweep(
     """
     if isinstance(states, (list, tuple)):
         states = stack_states(states)
+    states = seed_residual(states, getattr(round_fn, "compression", None))
     n_runs = int(jax.tree_util.tree_leaves(states)[0].shape[0])
     cfg = TrajectoryConfig(n_rounds, eval_every, track_sigmas, chunk_size)
     if schedule_per_run:

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.commplan import CommPlan, FailureModel, PlanSchedule, compile_plan
+from repro.core.compress import Compression, compressed_mix, init_residuals
 from repro.core.topology import Graph
 from repro.optim import Optimizer
 
@@ -43,9 +44,14 @@ class DFLState:
     opt_state: PyTree
     round: jax.Array  # scalar int32
     rng: jax.Array
+    # compressed-gossip carry (core.compress, DESIGN.md §18): each node's
+    # transmitted mirror, params-shaped fp32.  None (the default) is an
+    # *empty* pytree child — zero leaves, so uncompressed states flatten
+    # exactly as before and existing checkpoints/scans are untouched.
+    residual: PyTree | None = None
 
     def tree_flatten(self):
-        return (self.params, self.opt_state, self.round, self.rng), None
+        return (self.params, self.opt_state, self.round, self.rng, self.residual), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -106,6 +112,7 @@ def make_round_fn(
     node_p: float = 1.0,
     reinit_opt: bool = True,
     aggregate: bool = True,
+    compression: Compression | None = None,
 ):
     """Build the jittable communication-round function.
 
@@ -120,6 +127,13 @@ def make_round_fn(
     Returns ``round_fn(state, node_batches) -> (state, metrics)`` where
     ``node_batches`` leaves are (n_nodes, b, batch, ...): b local minibatches
     per node per round (Appendix A: b = 8).
+
+    ``compression`` (an active ``core.compress.Compression``) switches the
+    aggregation to the error-feedback delta form over the same plan
+    operator; the per-node mirror rides ``state.residual`` (seeded lazily
+    with zeros when absent — the fused executors seed it before their scan
+    so the carry structure is static).  ``compression=None`` or codec
+    ``"none"`` leaves the round body *bit-identical* to before.
     """
     failures = FailureModel(link_p=link_p, node_p=node_p)
     if isinstance(plan, Graph):
@@ -131,6 +145,7 @@ def make_round_fn(
             data_sizes=data_sizes, failures=failures if failures.active else None
         )
     scheduled = isinstance(plan, PlanSchedule)
+    comp = compression if (compression is not None and compression.active) else None
 
     def round_fn(state: DFLState, node_batches: Any) -> tuple[DFLState, dict]:
         rng, k_mix = jax.random.split(state.rng)
@@ -140,22 +155,35 @@ def make_round_fn(
                 partial(_local_steps, loss_fn, optimizer)
             )(state.params, state.opt_state, node_batches)
 
+        residual = state.residual
         if aggregate:
             key = k_mix if plan.failures.active else None
             with jax.named_scope("dfl_mix"):
-                if scheduled:
+                if comp is not None:
+                    if residual is None:  # legacy train_loop path (no seeding)
+                        residual = init_residuals(params)
+                    params, residual = compressed_mix(
+                        plan, params, residual, key, compression=comp,
+                        round_index=state.round if scheduled else None,
+                    )
+                elif scheduled:
                     params = plan.mix(params, state.round, key)
                 else:
                     params = plan.mix(params, key=key)
             if reinit_opt:  # Algorithm 1 line 15
                 opt_state = jax.vmap(optimizer.init)(params)
 
-        new_state = DFLState(params=params, opt_state=opt_state, round=state.round + 1, rng=rng)
+        new_state = DFLState(
+            params=params, opt_state=opt_state, round=state.round + 1, rng=rng,
+            residual=residual,
+        )
         return new_state, {"train_loss": losses.mean(), "train_loss_per_node": losses}
 
     # the *effective* plan (overrides applied) — the executor's wire-cost
-    # accountant reads it to count exactly the edges this round_fn mixes over
+    # accountant reads it to count exactly the edges this round_fn mixes over;
+    # the compression config rides along for codec-aware byte accounting
     round_fn.plan = plan if aggregate else None
+    round_fn.compression = comp if aggregate else None
     return round_fn
 
 

@@ -1,3 +1,4 @@
 from .ops import decavg_mix
+from .quant import quantised_decavg_mix_ref, quantised_mix_bsr
 from .ref import decavg_mix_ref
 from .sparse import bsr_from_dense, mix_bsr

@@ -1,0 +1,140 @@
+"""Fused quantise → block-sparse mix → dequantise Pallas TPU kernel.
+
+The compressed-gossip codecs (``repro.core.compress``) quantise each node's
+transmitted row in fixed-size chunks with one fp32 scale per chunk.  Lowered
+naively that is three passes over the payload — quantise, mix, dequantise —
+each of which streams (n, d) through HBM.  On TPU the whole pipeline fits in
+the sparse mixing kernel's inner loop: the W row-block a grid step loads is
+exactly one (block_n, block_d) tile, i.e. ``block_d``-element chunks of
+``block_n`` source rows, so the kernel quantises the tile *in VMEM* (per-row
+absmax over the chunk → scale → round/clip → dequantise) and feeds the MXU
+the dequantised fp32 tile directly.  One HBM pass, zero extra buffers; the
+quantisation cost rides the same data movement the mix already pays.
+
+Semantics: each *source* node transmits its row quantised per ``block_d``
+chunk; every receiver dequantises identically, so the mixed output is
+``M @ Q(W)`` with ``Q`` the per-(row, chunk) codec.  A column block referenced
+by several row blocks is re-quantised per reference — redundant FLOPs, not
+redundant semantics (Q is deterministic).  ``quantised_decavg_mix_ref`` is
+the jnp oracle with the same chunk boundaries (d padded to a ``block_d``
+multiple; zero padding never raises an absmax, so padded and unpadded chunks
+agree on the scale).
+
+Grid and BSR layout are ``sparse.mix_bsr``'s — see that module and
+DESIGN.md §9 for the scalar-prefetch walk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["quantised_decavg_mix_ref", "quantised_mix_bsr"]
+
+DEFAULT_BLOCK_D = 512
+_INT8_MAX = 127.0
+_FP8_MAX = 448.0  # float8_e4m3fn finite max, matches core.compress
+
+
+def _dequantised(w: jax.Array, codec: str) -> jax.Array:
+    """Per-row codec over one (rows, chunk) fp32 tile: Q(w) = deq(quant(w))."""
+    amax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    if codec == "int8":
+        scale = jnp.maximum(amax / _INT8_MAX, 1e-30)
+        return jnp.clip(jnp.round(w / scale), -_INT8_MAX, _INT8_MAX) * scale
+    if codec == "fp8":
+        scale = jnp.maximum(amax / _FP8_MAX, 1e-30)
+        q = (w / scale).astype(jnp.float8_e4m3fn)
+        return q.astype(jnp.float32) * scale
+    raise ValueError(f"unknown kernel codec {codec!r} (int8 | fp8)")
+
+
+def _quant_mix_kernel(codec, bc_ref, m_ref, w_ref, o_ref, acc_ref):
+    """acc[i, j] += tiles[i, k] @ Q(W[bc[i, k], j]) — quantise in VMEM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    deq = _dequantised(w_ref[...].astype(jnp.float32), codec)
+    acc_ref[...] += jnp.dot(
+        m_ref[0, 0].astype(jnp.float32), deq, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("codec", "block_d", "interpret"))
+def quantised_mix_bsr(
+    block_cols: jax.Array,
+    tiles: jax.Array,
+    w: jax.Array,
+    *,
+    codec: str = "int8",
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> jax.Array:
+    """Y = M @ Q(W) from the BSR form of M; W is (n, d) node-major params.
+
+    ``block_cols``/``tiles`` come from ``sparse.bsr_from_dense``; the codec
+    chunk IS the kernel's d-block (``block_d`` elements per scale).  Output
+    rows beyond n (BSR row padding) are sliced away like ``mix_bsr``.
+    """
+    if codec not in ("int8", "fp8"):
+        raise ValueError(f"unknown kernel codec {codec!r} (int8 | fp8)")
+    nrb, max_nnz, bn, _ = tiles.shape
+    n, d = w.shape
+    bd = min(block_d, pl.next_power_of_2(d))
+    n_pad = nrb * bn - n
+    d_pad = -d % bd
+    wp = jnp.pad(w, ((0, n_pad), (0, d_pad)))
+    dp_ = d + d_pad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nrb, dp_ // bd, max_nnz),
+        in_specs=[
+            pl.BlockSpec((1, 1, bn, bn), lambda i, j, k, bc: (i, k, 0, 0)),
+            pl.BlockSpec((bn, bd), lambda i, j, k, bc: (bc[i, k], j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bd), lambda i, j, k, bc: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bn, bd), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_quant_mix_kernel, codec),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrb * bn, dp_), w.dtype),
+        interpret=interpret,
+    )(block_cols, tiles, wp)
+    return out[:n, :d]
+
+
+def quantised_decavg_mix_ref(
+    m: jax.Array,
+    w: jax.Array,
+    *,
+    codec: str = "int8",
+    block_d: int = DEFAULT_BLOCK_D,
+) -> jax.Array:
+    """jnp oracle: M @ Q(W) with the kernel's exact chunking.
+
+    d is padded to a ``block_d`` multiple before chunking so the scale of the
+    last chunk matches what the kernel's padded tile computes (zero padding
+    never changes an absmax).
+    """
+    n, d = w.shape
+    bd = min(block_d, pl.next_power_of_2(d))
+    d_pad = -d % bd
+    wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, d_pad)))
+    chunks = wp.reshape(n, (d + d_pad) // bd, bd)
+    deq = _dequantised(chunks, codec).reshape(n, d + d_pad)[:, :d]
+    out = jnp.einsum(
+        "ij,jd->id", m.astype(jnp.float32), deq, preferred_element_type=jnp.float32
+    )
+    return out.astype(w.dtype)

@@ -8,6 +8,10 @@ Examples:
     python -m repro.launch.train --model mlp --nodes 16 --rounds 100
     python -m repro.launch.train --model cnn --topology ba --rounds 50
     python -m repro.launch.train --arch qwen2.5-3b --reduced --rounds 30
+    # transformer-scale gossip through the fused executor, int8-compressed
+    # exchanges (error-feedback mirrors ride the scan carry, DESIGN.md §18)
+    python -m repro.launch.train --model transformer --nodes 8 --rounds 20 --compress int8
+    python -m repro.launch.train --model mlp --compress topk --topk-frac 0.05
     python -m repro.launch.train --model mlp --no-gain-correction   # Fig.1 baseline
     # truly uncoordinated: per-node gains from on-device gossip estimation,
     # fused estimate→init→train (no host round-trip between phases)
@@ -43,6 +47,7 @@ from repro.checkpoint import save_train_state
 from repro.configs import get_reduced_config
 from repro.core import topology as T
 from repro.core.commplan import CommPlan, FailureModel, compile_plan, compile_schedule, cyclic_map
+from repro.core.compress import Compression
 from repro.core.faults import SCENARIOS, scenario
 from repro.core.membership import membership_schedule
 from repro.core.initialisation import InitConfig, gain_from_graph
@@ -93,9 +98,23 @@ def build_graph(kind: str, n: int, seed: int) -> T.Graph:
     }[kind]()
 
 
+# --model token archs: reduced zoo configs gossiped through the fused
+# executor on windowed synthetic token data (the transformer-scale payloads
+# the compressed-gossip codecs exist for)
+TOKEN_MODELS = {
+    "transformer": "qwen2.5-3b",
+    "moe": "granite-moe-1b-a400m",
+    "rwkv": "rwkv6-3b",
+}
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--model", choices=["mlp", "cnn", "vgg16"], default=None)
+    p.add_argument(
+        "--model",
+        choices=["mlp", "cnn", "vgg16", *sorted(TOKEN_MODELS)],
+        default=None,
+    )
     p.add_argument("--arch", type=str, default=None, help="zoo arch id (with --reduced)")
     p.add_argument("--reduced", action="store_true")
     p.add_argument("--nodes", type=int, default=16)
@@ -106,6 +125,24 @@ def main() -> None:
     p.add_argument("--batch-size", type=int, default=16)
     p.add_argument("--local-batches", type=int, default=8)
     p.add_argument("--zipf", type=float, default=0.0, help="non-iid Zipf alpha (0 = iid)")
+    p.add_argument("--seq-len", type=int, default=64,
+                   help="window length for the token --model archs")
+    p.add_argument(
+        "--compress", choices=["none", "int8", "fp8", "topk", "qtopk"],
+        default="none",
+        help="compressed gossip (core.compress): quantised / top-k sparsified "
+        "exchanges with per-node error-feedback mirrors in the scan carry; "
+        "wire-byte telemetry prices the codec's actual encoding "
+        "(qtopk = top-k with int8 values, 3 bytes/entry)",
+    )
+    p.add_argument("--compress-chunk", type=int, default=2048,
+                   help="codec chunk: elements per fp32 scale (≤ 65536)")
+    p.add_argument("--topk-frac", type=float, default=0.1,
+                   help="fraction of each chunk the topk/qtopk codecs transmit")
+    p.add_argument("--gamma", type=float, default=None,
+                   help="consensus step size of the compressed mix "
+                   "(default 1.0; 0.3 for topk/qtopk, which need the damping "
+                   "on sparse graphs)")
     p.add_argument("--link-p", type=float, default=1.0)
     p.add_argument("--node-p", type=float, default=1.0)
     p.add_argument(
@@ -225,6 +262,25 @@ def main() -> None:
     if args.resume and args.uncoordinated_init and not args.async_gossip:
         p.error("--resume is not supported through the fused warmup phase; "
                 "drop --uncoordinated-init (or resume an --elastic run)")
+    token_model = args.model in TOKEN_MODELS
+    if token_model and args.legacy_loop:
+        p.error("token --model archs gather from the precomputed schedule — "
+                "they run through the fused executors, not --legacy-loop "
+                "(use --arch for the host-driven token path)")
+    compress_cfg = None
+    if args.compress != "none":
+        sparse = args.compress in ("topk", "qtopk")
+        gamma = args.gamma if args.gamma is not None else (0.3 if sparse else 1.0)
+        compress_cfg = Compression(
+            codec=args.compress, chunk=args.compress_chunk,
+            topk_frac=args.topk_frac, gamma=gamma,
+        )
+        print(
+            f"compress: {args.compress} chunk={args.compress_chunk} "
+            + (f"topk_frac={args.topk_frac} " if sparse else "")
+            + f"gamma={gamma:g} "
+            f"(~{4.0 / compress_cfg.leaf_row_bytes(args.compress_chunk, np.float32) * args.compress_chunk:.1f}x bytes)"
+        )
 
     n = args.nodes
     graph = build_graph(args.topology, n, args.seed)
@@ -270,6 +326,37 @@ def main() -> None:
         init_with = lambda c: (lambda k: TF.init_params(k, cfg, c))
         eval_batch = None
         eval_fn = None
+    elif token_model:
+        # reduced zoo arch on windowed token data: xs/ys are (n, items, seq)
+        # next-token windows, so the fused executors' schedule gather (and
+        # the compressed mix riding them) drive a transformer-scale payload
+        cfg = get_reduced_config(TOKEN_MODELS[args.model])
+        seq, items = args.seq_len, args.items_per_node
+        win = (np.arange(items) * seq)[:, None] + np.arange(seq + 1)
+
+        def windows(seed):
+            t = make_token_stream(items * seq + 1, cfg.vocab_size, seed=seed)[win]
+            return t[:, :-1].astype(np.int32), t[:, 1:].astype(np.int32)
+
+        per_node = [windows(args.seed + i) for i in range(n)]
+        xs = np.stack([x for x, _ in per_node])
+        ys = np.stack([y for _, y in per_node])
+        ex, ey = windows(args.seed + n)  # held-out stream, same window grid
+        eval_batch = (ex[:64], ey[:64])
+        icfg = InitConfig("trunc_normal", gain)
+        init_with = lambda c: (lambda k: TF.init_params(k, cfg, c))
+
+        def loss_fn(params, batch):
+            x, y = batch
+            hidden, aux = TF.forward(params, cfg, x)
+            return TF.lm_loss(params, cfg, hidden, y) + 0.01 * aux
+
+        eval_fn = make_eval_fn(loss_fn)
+        d_model = sum(
+            int(np.prod(l.shape))
+            for l in jax.tree_util.tree_leaves(TF.init_params(jax.random.PRNGKey(0), cfg, icfg))
+        )
+        print(f"token model {cfg.name}: {d_model / 1e6:.2f}M params/node, seq {seq}")
     else:
         model = args.model or "mlp"
         ds = {"mlp": mnist_like, "cnn": so2sat_like, "vgg16": cifar10_like}[model](
@@ -313,7 +400,10 @@ def main() -> None:
     round_fn = (
         None
         if args.async_gossip
-        else make_round_fn(loss_fn, opt, mix_plan, link_p=args.link_p, node_p=args.node_p)
+        else make_round_fn(
+            loss_fn, opt, mix_plan, link_p=args.link_p, node_p=args.node_p,
+            compression=compress_cfg,
+        )
     )
     eval_every = max(1, args.rounds // 20)
     if args.log_every > 0 and not args.chunk_rounds:
@@ -393,7 +483,7 @@ def main() -> None:
         state, hist, _aux = run_event_trajectory(
             state, loss_fn, opt, plan, stream, xs, ys, sched,
             b_local=args.local_batches, n_bins=20, eval_fn=eval_fn,
-            eval_batch=eval_batch,
+            eval_batch=eval_batch, compression=compress_cfg,
         )
         for i, t in enumerate(hist["time"]):
             print(
@@ -454,7 +544,7 @@ def main() -> None:
                 eval_batch=eval_batch, chunk_size=args.chunk_rounds,
                 b_local=args.local_batches, init_one=init_one_g, faults=faults,
                 checkpoint=ckpt_policy, resume_from=args.resume,
-                on_chunk=stream_hook,
+                on_chunk=stream_hook, compression=compress_cfg,
             )
             if stream_hook is None:
                 for i, r in enumerate(hist["round"]):

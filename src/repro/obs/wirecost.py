@@ -38,14 +38,33 @@ __all__ = [
 ]
 
 
-def param_row_bytes(params: Any) -> int:
+def param_row_bytes(
+    params: Any,
+    codec_bytes: Callable[[int, Any], float] | None = None,
+) -> int:
     """Bytes of ONE node's model — every leaf carries a leading node axis,
-    so a node's row is ``leaf.size / n`` elements per leaf."""
+    so a node's row is ``leaf.size / n`` elements per leaf.
+
+    The per-leaf node axis is read off each leaf's own leading dim (a
+    mixed-dtype pytree prices every leaf at its *own* itemsize, and a
+    scalar/unstacked leaf counts in full rather than crashing the
+    accountant).  ``codec_bytes(row_elems, dtype) -> float`` overrides the
+    itemsize pricing with a compressed encoding's wire cost — pass
+    ``Compression.leaf_row_bytes`` (``repro.core.compress``) so quantised /
+    sparsified exchanges stop over-reporting at the raw dtype width.
+    Fractional per-leaf costs accumulate exactly; only the total rounds.
+    """
     leaves = jax.tree_util.tree_leaves(params)
     if not leaves:
         return 0
-    n = leaves[0].shape[0]
-    return int(sum((leaf.size // n) * leaf.dtype.itemsize for leaf in leaves))
+    total = 0.0
+    for leaf in leaves:
+        row_elems = leaf.size // leaf.shape[0] if leaf.ndim else leaf.size
+        if codec_bytes is not None:
+            total += float(codec_bytes(int(row_elems), leaf.dtype))
+        else:
+            total += row_elems * np.dtype(leaf.dtype).itemsize
+    return int(round(total))
 
 
 def _event_plan(plan: CommPlan | PlanSchedule) -> CommPlan | None:
@@ -101,15 +120,19 @@ def make_wire_fn(
     return wire
 
 
-def sharded_wire_per_round(plan, params: Any) -> dict[str, int]:
+def sharded_wire_per_round(
+    plan, params: Any, codec_bytes: Callable[[int, Any], float] | None = None
+) -> dict[str, int]:
     """Static per-round wire stats of a ``ShardedCommPlan`` mix.
 
     ``wire_bytes`` is the cross-shard halo traffic for the full parameter
     payload (the plan's static row count × the model's per-node row bytes,
     every leaf's halo exchange included); ``wire_collectives`` counts
     collective launches per round (the plan's per-leaf count × leaves).
+    ``codec_bytes`` follows :func:`param_row_bytes` — compressed halo rows
+    price at the codec's encoding.
     """
-    row_bytes = param_row_bytes(params)
+    row_bytes = param_row_bytes(params, codec_bytes=codec_bytes)
     n_leaves = len(jax.tree_util.tree_leaves(params))
     return {
         "wire_bytes": int(plan.cross_shard_bytes_per_round(row_bytes, "mix")),

@@ -1,0 +1,389 @@
+"""Compressed gossip (core.compress, DESIGN.md §18).
+
+Four contracts:
+
+1. **Codec round-trip bounds** — int8 dequantisation error per entry is at
+   most half a quantisation step of its chunk; topk keeps its entries exact
+   and zeroes the rest.
+2. **Error-feedback contraction** — compressed DecAvg with the mirror carry
+   drives consensus distance toward 0 on ring / k-regular graphs (γ = 1 for
+   the quantisers, γ = 0.3 for topk — the sparsifier needs damping on
+   poorly-connected graphs).
+3. **Bit-parity of the uncompressed path** — codec "none" routes straight
+   to the raw operators, bitwise, across dense / sparse / ppermute and
+   {clean, failure} rounds, and ``Compression`` threads through
+   ``make_round_fn`` / the executors without perturbing anything.
+4. **Fused Pallas kernel parity** — ``quantised_mix_bsr`` matches the jnp
+   oracle with the same chunk grid on every sparse-plan family.
+
+Plus the wire-format arithmetic of ``leaf_row_bytes`` against hand-computed
+values and the mixed-dtype ``param_row_bytes`` fix.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology as T
+from repro.core.commplan import FailureModel, compile_plan
+from repro.core.compress import (
+    Compression,
+    compressed_mix,
+    compressed_spread,
+    encode_decode,
+    init_residuals,
+)
+from repro.core.mixing import receive_matrix
+from repro.kernels.mix import bsr_from_dense, quantised_decavg_mix_ref, quantised_mix_bsr
+from repro.obs.wirecost import param_row_bytes
+
+
+def _consensus_distance(x):
+    return float(jnp.linalg.norm(x - x.mean(axis=0, keepdims=True)))
+
+
+# ------------------------------------------------------------- config guards
+def test_compression_validation():
+    with pytest.raises(ValueError):
+        Compression(codec="lz4")
+    with pytest.raises(ValueError):
+        Compression(codec="int8", chunk=0)
+    with pytest.raises(ValueError):
+        Compression(codec="int8", chunk=1 << 17)  # uint16 in-chunk indices
+    with pytest.raises(ValueError):
+        Compression(codec="topk", topk_frac=0.0)
+    with pytest.raises(ValueError):
+        Compression(codec="int8", gamma=0.0)
+    assert not Compression().active
+    assert Compression(codec="fp8").active
+
+
+# --------------------------------------------------------- codec round trips
+def test_int8_roundtrip_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 500)) * 7.0
+    comp = Compression(codec="int8", chunk=128)
+    q = encode_decode(x, comp)
+    # error <= scale/2 per entry, scale = chunk absmax / 127, per 128-chunk
+    pad = np.pad(np.asarray(x), ((0, 0), (0, -500 % 128)))
+    chunks = pad.reshape(6, -1, 128)
+    scale = np.abs(chunks).max(axis=-1, keepdims=True) / 127.0
+    bound = np.broadcast_to(scale / 2 + 1e-7, chunks.shape).reshape(6, -1)[:, :500]
+    assert (np.abs(np.asarray(q) - np.asarray(x)) <= bound).all()
+
+
+def test_fp8_roundtrip_relative_bound():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 300)) * 0.3
+    q = encode_decode(x, Compression(codec="fp8", chunk=64))
+    # e4m3 keeps ~3 mantissa bits -> <=2^-4 relative error at full scale,
+    # plus the absmax normalisation; 10% of chunk absmax is a safe envelope
+    pad = np.pad(np.asarray(x), ((0, 0), (0, -300 % 64)))
+    amax = np.abs(pad.reshape(4, -1, 64)).max(axis=-1, keepdims=True)
+    bound = np.broadcast_to(0.1 * amax, pad.reshape(4, -1, 64).shape).reshape(4, -1)[:, :300]
+    assert (np.abs(np.asarray(q) - np.asarray(x)) <= bound).all()
+
+
+def test_topk_keeps_exact_and_zeroes_rest():
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 96))
+    comp = Compression(codec="topk", chunk=32, topk_frac=0.25)
+    q = np.asarray(encode_decode(x, comp))
+    xn = np.asarray(x)
+    kept = q != 0
+    # kept entries are transmitted verbatim; count per 32-chunk is exactly k
+    assert np.array_equal(q[kept], xn[kept])
+    assert (kept.reshape(3, 3, 32).sum(axis=-1) == comp.topk_count(32)).all()
+    # each chunk keeps its largest-|.| entries: min kept |x| >= max dropped
+    a = np.abs(xn).reshape(3, 3, 32)
+    k3 = kept.reshape(3, 3, 32)
+    assert (
+        np.where(k3, a, np.inf).min(axis=-1) >= np.where(k3, -np.inf, a).max(axis=-1)
+    ).all()
+
+
+def test_qtopk_sparsity_pattern_and_value_bound():
+    x = jax.random.normal(jax.random.PRNGKey(5), (3, 96))
+    comp = Compression(codec="qtopk", chunk=32, topk_frac=0.25)
+    q = np.asarray(encode_decode(x, comp))
+    xn = np.asarray(x)
+    kept = q != 0
+    assert (kept.reshape(3, 3, 32).sum(axis=-1) == comp.topk_count(32)).all()
+    # same selection as topk, but kept values carry the int8 error bound:
+    # scale = chunk absmax / 127 (absmax IS the top-1 kept magnitude)
+    scale = np.abs(xn).reshape(3, 3, 32).max(axis=-1, keepdims=True) / 127.0
+    bound = np.broadcast_to(scale / 2 + 1e-7, (3, 3, 32)).reshape(3, 96)
+    assert (np.abs(q[kept] - xn[kept]) <= bound[kept]).all()
+    sel = np.asarray(
+        encode_decode(x, Compression(codec="topk", chunk=32, topk_frac=0.25))
+    ) != 0
+    assert np.array_equal(kept, sel)
+
+
+def test_encode_decode_pytree_and_none():
+    tree = {
+        "w": jax.random.normal(jax.random.PRNGKey(3), (4, 33)),
+        "b": jax.random.normal(jax.random.PRNGKey(4), (4,)),
+    }
+    assert encode_decode(tree, Compression()) is tree  # codec none: no touch
+    q = encode_decode(tree, Compression(codec="int8", chunk=16))
+    assert q["w"].shape == (4, 33) and q["b"].shape == (4,)
+
+
+# ------------------------------------------------- error-feedback contraction
+@pytest.mark.parametrize(
+    "codec,gamma,target",
+    [
+        ("int8", 1.0, 1e-3),
+        ("fp8", 1.0, 1e-3),
+        ("topk", 0.3, 0.35),
+        ("qtopk", 0.3, 0.35),
+    ],
+)
+def test_compressed_consensus_contracts(codec, gamma, target):
+    """Mirror-form compressed DecAvg reaches (near-)consensus where memory-
+    less compression would floor out: the quantisers get all the way down,
+    the damped sparsifier contracts by >10x over the horizon."""
+    for graph in (T.ring(16), T.random_k_regular(16, 4, seed=0)):
+        plan = compile_plan(graph)
+        x = jax.random.normal(jax.random.PRNGKey(7), (16, 400))
+        comp = Compression(codec=codec, chunk=128, gamma=gamma)
+        h = init_residuals(x)
+        d0 = _consensus_distance(x)
+
+        @jax.jit
+        def rounds(x, h):
+            def step(carry, _):
+                x, h = carry
+                x, h = compressed_mix(plan, x, h, compression=comp)
+                return (x, h), None
+
+            (x, h), _ = jax.lax.scan(step, (x, h), None, length=300)
+            return x, h
+
+        x_end, _ = rounds(x, h)
+        assert _consensus_distance(x_end) < target * d0, graph.name
+        # the mean is conserved through every compressed round (M doubly
+        # stochastic on these families, delta form adds mix(h')-h')
+        np.testing.assert_allclose(
+            np.asarray(x_end.mean(axis=0)), np.asarray(x.mean(axis=0)), atol=1e-3
+        )
+
+
+def test_error_feedback_off_floors_out():
+    """Ablation: memory-less int8 stalls at the codec noise floor while the
+    mirror form keeps contracting — the reason the carry exists."""
+    plan = compile_plan(T.ring(12))
+    x = jax.random.normal(jax.random.PRNGKey(8), (12, 256))
+    on = Compression(codec="int8", chunk=64)
+    off = dataclasses.replace(on, error_feedback=False)
+
+    def run(comp):
+        def step(carry, _):
+            return compressed_mix(plan, *carry, compression=comp), None
+
+        (xe, _), _ = jax.lax.scan(step, (x, init_residuals(x)), None, length=200)
+        return _consensus_distance(xe)
+
+    assert run(on) < 0.05 * run(off)
+
+
+def test_stream_matches_unstreamed():
+    plan = compile_plan(T.random_k_regular(12, 4, seed=1))
+    x = jax.random.normal(jax.random.PRNGKey(9), (12, 300))
+    h = init_residuals(x) + 0.1
+    comp = Compression(codec="int8", chunk=64)
+    a, ha = compressed_mix(plan, x, h, compression=comp)
+    b, hb = compressed_mix(
+        plan, x, h, compression=dataclasses.replace(comp, stream=True)
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6)
+    np.testing.assert_allclose(np.asarray(ha), np.asarray(hb), atol=2e-6)
+
+
+def test_compressed_spread_conserves_mass():
+    plan = compile_plan(T.barabasi_albert(14, 3, seed=2))
+    v = jax.random.uniform(jax.random.PRNGKey(10), (14, 8)) + 0.5
+    h = jnp.zeros_like(v)
+    comp = Compression(codec="topk", chunk=8, topk_frac=0.25, gamma=0.5)
+    total = v.sum(axis=0)
+    for _ in range(5):
+        v, h = compressed_spread(plan, v, h, compression=comp)
+    np.testing.assert_allclose(np.asarray(v.sum(axis=0)), np.asarray(total), rtol=1e-5)
+
+
+# ------------------------------------------------------ uncompressed parity
+@pytest.mark.parametrize("backend", ["dense", "sparse", "ppermute"])
+@pytest.mark.parametrize("link_p", [1.0, 0.7])
+def test_codec_none_bitwise_parity(backend, link_p):
+    plan = compile_plan(
+        T.random_k_regular(8, 4, seed=3),
+        backend=backend,
+        failures=FailureModel(link_p=link_p),
+    )
+    tree = {
+        "w": jax.random.normal(jax.random.PRNGKey(11), (8, 40)),
+        "b": jax.random.normal(jax.random.PRNGKey(12), (8, 5)),
+    }
+    key = jax.random.PRNGKey(13) if link_p < 1.0 else None
+    h = init_residuals(tree)
+    out, h2 = compressed_mix(plan, tree, h, key, compression=Compression())
+    ref = plan.mix(tree, key=key)
+    for a, b in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert h2 is h  # the carry is passed through untouched
+
+
+def test_commplan_mix_compression_kwarg():
+    """CommPlan.mix(compression=) is the same operator as compressed_mix."""
+    plan = compile_plan(T.ring(10))
+    x = jax.random.normal(jax.random.PRNGKey(14), (10, 64))
+    comp = Compression(codec="int8", chunk=32)
+    a, ha = plan.mix(x, compression=comp, residual=init_residuals(x))
+    b, hb = compressed_mix(plan, x, init_residuals(x), compression=comp)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ha), np.asarray(hb))
+
+
+# ------------------------------------------------------- fused Pallas kernel
+@pytest.mark.parametrize("codec", ["int8", "fp8"])
+@pytest.mark.parametrize(
+    "family",
+    ["ring", "kregular", "ba", "complete"],
+)
+def test_quantised_mix_bsr_parity(codec, family):
+    g = {
+        "ring": lambda: T.ring(40),
+        "kregular": lambda: T.random_k_regular(40, 4, seed=0),
+        "ba": lambda: T.barabasi_albert(40, 3, seed=0),
+        "complete": lambda: T.complete(40),
+    }[family]()
+    m = np.asarray(receive_matrix(g), np.float32)
+    rng = np.random.default_rng(5)
+    w = (rng.normal(size=(40, 190)) * rng.uniform(0.01, 8, size=(40, 1))).astype(
+        np.float32
+    )
+    bc, tiles = bsr_from_dense(m, 8)
+    got = quantised_mix_bsr(
+        jnp.asarray(bc),
+        jnp.asarray(tiles),
+        jnp.asarray(w),
+        codec=codec,
+        block_d=64,
+        interpret=True,
+    )
+    ref = quantised_decavg_mix_ref(
+        jnp.asarray(m), jnp.asarray(w), codec=codec, block_d=64
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+def test_quantised_mix_bsr_rejects_unknown_codec():
+    bc, tiles = bsr_from_dense(np.eye(8, dtype=np.float32), 8)
+    w = jnp.ones((8, 16))
+    with pytest.raises(ValueError):
+        quantised_mix_bsr(jnp.asarray(bc), jnp.asarray(tiles), w, codec="zstd")
+
+
+def test_quantised_kernel_exact_at_uniform_rows():
+    """Rows with a single magnitude level quantise exactly (x = scale*q with
+    integer q), so the fused kernel must equal the uncompressed product."""
+    g = T.ring(16)
+    m = np.asarray(receive_matrix(g), np.float32)
+    w = np.tile(
+        np.asarray([1.0, -1.0, 1.0, 1.0], np.float32), (16, 32)
+    )  # |w| = 1 everywhere
+    bc, tiles = bsr_from_dense(m, 8)
+    got = quantised_mix_bsr(
+        jnp.asarray(bc), jnp.asarray(tiles), jnp.asarray(w), block_d=64, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(got), m @ w, atol=1e-6)
+
+
+# ------------------------------------------------------------- wire formats
+def test_leaf_row_bytes_hand_values():
+    c = Compression(codec="int8", chunk=100)
+    assert c.leaf_row_bytes(250, np.float32) == 250 + 3 * 4  # 3 chunks' scales
+    assert c.leaf_row_bytes(0, np.float32) == 0.0
+    f = Compression(codec="fp8", chunk=64)
+    assert f.leaf_row_bytes(64, np.float32) == 64 + 4
+    t = Compression(codec="topk", chunk=100, topk_frac=0.1)
+    # 2 full chunks keep 10 each, the 50-tail keeps 5; 6 bytes per entry
+    assert t.leaf_row_bytes(250, np.float32) == (10 + 10 + 5) * 6
+    # a 3-element tail still transmits at least one entry
+    assert t.leaf_row_bytes(103, np.float32) == (10 + 1) * 6
+    qt = Compression(codec="qtopk", chunk=100, topk_frac=0.1)
+    # same selection, 3 bytes per entry + one fp32 scale per chunk
+    assert qt.leaf_row_bytes(250, np.float32) == (10 + 10 + 5) * 3 + 3 * 4
+    n = Compression()
+    assert n.leaf_row_bytes(250, np.float32) == 1000.0
+
+
+def test_executor_compression_integration():
+    """make_round_fn + run_trajectory: codec "none"/None are bit-identical,
+    an active codec threads the mirror through the scan carry and the wire
+    channel prices bytes at the codec's encoding."""
+    from repro.data import batch_index_schedule, mnist_like, node_datasets
+    from repro.fed import init_fl_state, make_round_fn, run_trajectory
+    from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
+    from repro.core.initialisation import InitConfig
+    from repro.optim import sgd
+
+    n, per, rounds, b = 6, 32, 4, 2
+    ds = mnist_like(n * per, seed=0)
+    xs, ys = node_datasets(ds, [np.arange(i * per, (i + 1) * per) for i in range(n)])
+    loss_fn = lambda p, bt: classifier_loss(mlp_forward(p, bt[0]), bt[1])
+    opt = sgd(1e-3, 0.5)
+    init_one = lambda k: init_mlp(InitConfig("he_normal", 2.0), k, hidden=(16,))
+    sched = batch_index_schedule(per, n, 8, rounds * b, seed=0)
+    plan = compile_plan(T.ring(n))
+    state = init_fl_state(jax.random.PRNGKey(0), n, init_one, opt)
+
+    def run(compression):
+        rf = make_round_fn(loss_fn, opt, plan, compression=compression)
+        return run_trajectory(
+            state, rf, xs, ys, sched, n_rounds=rounds, eval_every=2, b_local=b
+        )
+
+    s_raw, h_raw = run(None)
+    s_none, h_none = run(Compression())
+    for a, bb in zip(
+        jax.tree_util.tree_leaves(s_none.params), jax.tree_util.tree_leaves(s_raw.params)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+    assert s_raw.residual is None and s_none.residual is None
+
+    comp = Compression(codec="int8", chunk=256)
+    s_c, h_c = run(comp)
+    assert s_c.residual is not None
+    # codec pricing: same message counts, codec-rate bytes
+    assert h_c["wire_messages"] == h_raw["wire_messages"]
+    want = param_row_bytes(state.params, codec_bytes=comp.leaf_row_bytes)
+    assert h_c["wire_bytes"][0] == h_c["wire_messages"][0] * want
+    assert h_raw["wire_bytes"][0] > 3.7 * h_c["wire_bytes"][0]
+    # compression perturbs the trajectory but not catastrophically
+    diff = max(
+        float(jnp.abs(a - bb).max())
+        for a, bb in zip(
+            jax.tree_util.tree_leaves(s_c.params),
+            jax.tree_util.tree_leaves(s_raw.params),
+        )
+    )
+    assert 0 < diff < 1.0
+
+
+def test_param_row_bytes_mixed_dtype_and_codec():
+    params = {
+        "w": jnp.zeros((4, 100), jnp.float32),
+        "h": jnp.zeros((4, 50), jnp.bfloat16),
+        "s": jnp.zeros((4,), jnp.float32),
+    }
+    # mixed dtypes price at their own itemsize (the satellite fix): the old
+    # single-itemsize accounting would have charged bf16 rows 4 bytes/elem
+    assert param_row_bytes(params) == 100 * 4 + 50 * 2 + 4
+    comp = Compression(codec="int8", chunk=64)
+    want = (100 + 2 * 4) + (50 + 4) + (1 + 4)
+    assert param_row_bytes(params, codec_bytes=comp.leaf_row_bytes) == want
+    # >=4x headline: a topk row at frac 0.1 versus its fp32 encoding
+    t = Compression(codec="topk", chunk=1000, topk_frac=0.1)
+    big = {"w": jnp.zeros((2, 10_000), jnp.float32)}
+    assert param_row_bytes(big) / param_row_bytes(big, codec_bytes=t.leaf_row_bytes) > 4

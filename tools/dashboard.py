@@ -38,6 +38,7 @@ BENCH_ORDER = (
     "BENCH_async.json",
     "BENCH_scaling.json",
     "BENCH_elastic.json",
+    "BENCH_compress.json",
 )
 
 # per-artifact headline timing field for the summary trend table, tried in
@@ -96,6 +97,52 @@ def _md_table(headers: list[str], rows: list[list[str]]) -> list[str]:
     return out
 
 
+def _pareto_lines(doc: dict) -> list[str]:
+    """Bytes-vs-loss Pareto table from BENCH_compress.json: per (kind,
+    family, n) group, rows sorted by wire bytes; a row is Pareto-optimal
+    when no sibling costs fewer bytes AND lands a lower final loss."""
+    groups: dict[tuple, list[dict]] = {}
+    for rec in doc.get("records", []):
+        groups.setdefault(
+            (rec.get("kind", "?"), rec.get("family", "?"), rec.get("n", "?")), []
+        ).append(rec)
+    lines = [
+        "Per setup, sorted cheapest-wire first; `pareto` marks codecs no",
+        "sibling beats on both bytes and final loss simultaneously.",
+        "",
+    ]
+    for (kind, family, n), recs in groups.items():
+        recs = sorted(recs, key=lambda r: r.get("wire_bytes_per_round", 0))
+        rows = []
+        for rec in recs:
+            b, l = rec.get("wire_bytes_per_round", 0), rec.get("final_test_loss", 0.0)
+            dominated = any(
+                o is not rec
+                and o.get("wire_bytes_per_round", 0) <= b
+                and o.get("final_test_loss", 0.0) < l
+                for o in recs
+            )
+            rows.append(
+                [
+                    rec.get("codec", "?"),
+                    _fmt(b),
+                    f"{rec.get('bytes_reduction_vs_fp32', 1.0):.2f}x",
+                    _fmt(l),
+                    f"{rec.get('loss_delta_vs_fp32_pct', 0.0):+.2f}%",
+                    _fmt(rec.get("us_per_round_steady", "")),
+                    "" if dominated else "yes",
+                ]
+            )
+        lines += [f"**{kind} / {family} / n={n}**", ""]
+        lines += _md_table(
+            ["codec", "wire B/round", "reduction", "final loss", "Δloss",
+             "us/round steady", "pareto"],
+            rows,
+        )
+        lines.append("")
+    return lines
+
+
 def bench_sections(root: pathlib.Path) -> list[tuple[str, list[str]]]:
     """(title, markdown lines) per section, from the artifacts under root."""
     docs: dict[str, dict] = {}
@@ -125,6 +172,12 @@ def bench_sections(root: pathlib.Path) -> list[tuple[str, list[str]]]:
         lines += ["Missing artifacts: " + ", ".join(missing), ""]
     lines += _md_table(["suite", "identity", "field", "value"], summary_rows)
     sections.append(("Headline timings", lines))
+
+    if "BENCH_compress.json" in docs:
+        sections.append(
+            ("Compressed gossip: bytes-vs-loss Pareto",
+             _pareto_lines(docs["BENCH_compress.json"]))
+        )
 
     for name, doc in docs.items():
         records = doc.get("records", [])
