@@ -1,0 +1,181 @@
+"""Figure 13: live serving under gossip — latency/staleness surface by router.
+
+DFL never converges to one artifact: every node holds its own parameters,
+equal only up to the consensus noise floor.  Serving therefore routes each
+query to a *node*, and the router choice trades the staleness of the
+answering parameters against locality and queueing (DESIGN.md §19).  This
+benchmark maps that surface: for each topology family and size, an
+interleaved train+serve run (``fed.serve.run_serve_trajectory`` — gossip
+and query events merged into one scanned envelope, no barrier) is swept
+over qps × router policy:
+
+* ``uniform`` — any node, ignores both staleness and distance (baseline),
+* ``local``   — always the home node (zero hops, whatever its clock says),
+* ``consensus`` — argmin of staleness + weighted hops + weighted queue wait.
+
+Per cell: served-query latency quantiles (virtual time, open-loop queueing
+model), mean served staleness (time since the answering node last mixed),
+mean hop distance, final train/test loss (training must be unperturbed by
+load — the serve path is bit-parity with the plain event executor), and
+per-event executor cost split into compile vs steady-state via
+``ChunkTimer``.
+
+The committed ``BENCH_serve.json`` is quick-mode so the CI bench gate
+(``tools/check_bench.py --compare``) diffs like against like.  The run
+aborts if the consensus router fails to beat uniform on mean served
+staleness at comparable (≤1.05×) p50 latency on at least one family —
+the acceptance bar for the router actually using the virtual clocks.
+
+Schema (``BENCH_serve.json``): ``{device, cpu_count, quick, consensus_wins,
+records: [{family, n, router, qps, horizon, n_events, n_queries, served,
+p50_latency, p95_latency, mean_latency, mean_staleness_served, mean_hops,
+final_train_loss, final_test_loss, queries_per_wall_second,
+us_per_event_steady, compile_seconds}]}`` — validated (and
+regression-gated) by ``tools/check_bench.py`` in CI.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.core import topology as T
+from repro.core.commplan import compile_plan
+from repro.data.pipeline import batch_index_schedule
+from repro.fed import init_fl_state
+from repro.fed.router import ROUTER_POLICIES, make_router, poisson_query_stream
+from repro.fed.serve import run_serve_trajectory, serve_summary
+
+from .common import ChunkTimer, _mlp_setup, emit, gain_from_graph
+
+OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"
+
+FAMILIES = {
+    "ring": lambda n, seed: T.ring(n),
+    "kreg": lambda n, seed: T.random_k_regular(n, 8, seed=seed),
+}
+
+SERVICE_TIME = 0.2
+HOP_LATENCY = 0.05
+
+
+def run(quick: bool = True) -> None:
+    sizes = (16,) if quick else (16, 64)
+    horizon = 30.0 if quick else 60.0
+    qps_grid = (2.0, 8.0) if quick else (2.0, 8.0, 32.0)
+    per_node = 64 if quick else 128
+    b_local, batch_size, n_bins, seed = 2, 16, 10, 0
+    records = []
+
+    for family, build in FAMILIES.items():
+        for n in sizes:
+            graph, xs, ys, test, loss_fn, opt, eval_fn, init_one = _mlp_setup(
+                n, build(n, 0), per_node, (128, 64), "sgd", seed, 512
+            )
+            state = init_fl_state(
+                jax.random.PRNGKey(seed), n, init_one(gain_from_graph(graph)), opt
+            )
+            plan = compile_plan(graph)
+            stream = T.poisson_event_stream(graph, horizon=horizon, rate=1.0, seed=seed + 1)
+            sched = batch_index_schedule(
+                per_node, n, batch_size, max(int(horizon), 1) * b_local, seed=seed
+            )
+            for qps in qps_grid:
+                queries = poisson_query_stream(n, horizon, qps, seed=seed + 2)
+                for router_name in ROUTER_POLICIES:
+                    router = make_router(graph, router_name)
+                    env = stream.envelope + queries.envelope
+                    timer = ChunkTimer()
+                    t0 = time.time()
+                    _, hist, serve, _ = run_serve_trajectory(
+                        state,
+                        loss_fn,
+                        opt,
+                        plan,
+                        stream,
+                        queries,
+                        router,
+                        xs,
+                        ys,
+                        sched,
+                        b_local=b_local,
+                        n_bins=n_bins,
+                        eval_fn=eval_fn,
+                        eval_batch=test,
+                        service_time=SERVICE_TIME,
+                        hop_latency=HOP_LATENCY,
+                        chunk_events=max(env // 8, 1),
+                        on_chunk=timer,
+                    )
+                    wall = time.time() - t0
+                    compile_s, steady = timer.split()
+                    summ = serve_summary(serve)
+                    rec = {
+                        "family": family,
+                        "n": n,
+                        "router": router_name,
+                        "qps": qps,
+                        "horizon": int(horizon),
+                        "n_events": stream.n_events,
+                        "n_queries": queries.n_queries,
+                        "served": summ["served"],
+                        "p50_latency": summ["p50_latency"],
+                        "p95_latency": summ["p95_latency"],
+                        "mean_latency": summ["mean_latency"],
+                        "mean_staleness_served": summ["mean_staleness"],
+                        "mean_hops": summ["mean_hops"],
+                        "final_train_loss": float(hist["train_loss"][-1]),
+                        "final_test_loss": float(hist["test_loss"][-1]),
+                        "queries_per_wall_second": summ["served"] / max(wall, 1e-9),
+                        "us_per_event_steady": steady * 1e6,
+                        "compile_seconds": compile_s,
+                    }
+                    records.append(rec)
+                    emit(
+                        f"fig13.{family}.n{n}.{router_name}.qps{qps:g}",
+                        rec["us_per_event_steady"],
+                        f"p50={rec['p50_latency']:.3f};"
+                        f"stale={rec['mean_staleness_served']:.3f};"
+                        f"hops={rec['mean_hops']:.2f};"
+                        f"test={rec['final_test_loss']:.3f}",
+                    )
+
+    # acceptance: the consensus router must dominate uniform on served-model
+    # staleness at comparable p50 latency for at least one topology family
+    cells: dict = {}
+    for r in records:
+        cells.setdefault((r["family"], r["n"]), {}).setdefault(r["qps"], {})[r["router"]] = r
+    wins = []
+    for (family, n), by_qps in cells.items():
+        ok = all(
+            c["consensus"]["mean_staleness_served"] < c["uniform"]["mean_staleness_served"]
+            and c["consensus"]["p50_latency"] <= 1.05 * c["uniform"]["p50_latency"]
+            for c in by_qps.values()
+        )
+        if ok:
+            wins.append(f"{family}.n{n}")
+    if not wins:
+        raise AssertionError(
+            "consensus router failed to beat uniform on staleness at equal p50 "
+            "latency on every family — the router is not using the virtual clocks"
+        )
+
+    OUT.write_text(
+        json.dumps(
+            {
+                "device": str(jax.devices()[0]),
+                "cpu_count": __import__("os").cpu_count(),
+                "quick": quick,
+                "consensus_wins": wins,
+                "records": records,
+            },
+            indent=2,
+        )
+    )
+    print(f"# wrote {OUT} (consensus wins on: {', '.join(wins)})", flush=True)
+
+
+if __name__ == "__main__":
+    run()

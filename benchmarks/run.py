@@ -28,6 +28,7 @@ from . import (
     fig10_scaling,
     fig11_elastic,
     fig12_compress,
+    fig13_serve,
     kernels_bench,
     roofline_report,
     rounds_bench,
@@ -47,6 +48,7 @@ MODULES = {
     "fig10": fig10_scaling,
     "fig11": fig11_elastic,
     "fig12": fig12_compress,
+    "fig13": fig13_serve,
     "kernels": kernels_bench,
     "roofline": roofline_report,
     "rounds": rounds_bench,

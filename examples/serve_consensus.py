@@ -1,9 +1,21 @@
-"""End-to-end train → consensus → serve.
+"""End-to-end train → route → serve (DESIGN.md §19).
 
 DFL-trains a reduced qwen2.5-family decoder on synthetic token streams
-(8 nodes, random 4-regular graph, gain-corrected init), averages the node
-ensemble into the consensus model, and serves a batch of generation
-requests through the KV-cache decode path.
+(8 nodes, random 4-regular graph, gain-corrected init), then serves a
+batch of generation requests two ways:
+
+1. **consensus serving** — average the node ensemble into one artifact
+   (``consensus_params``) and answer everything from it through the
+   batched prefill→KV-insert→decode ``ServeEngine``;
+2. **ensemble serving** — keep the per-node parameter stacks and let a
+   ``Router`` assign each query a serving node (here: the consensus
+   policy with equal clocks, which degrades gracefully to
+   nearest-by-hops), answered via ``ServeEngine.serve``.
+
+The two answer sets differ only by consensus noise — exactly the gap the
+paper's σ-floor characterises.  For serving *interleaved with training*
+(queries riding the gossip event scan against live, drifting node
+parameters), see ``python -m repro.launch.serve``.
 
 Run:  PYTHONPATH=src python examples/serve_consensus.py
 """
@@ -15,7 +27,14 @@ from repro.configs import get_reduced_config
 from repro.core import topology as T
 from repro.core.initialisation import InitConfig, gain_from_graph
 from repro.data import make_token_stream, token_batch_iterator
-from repro.fed import consensus_params, generate, init_fl_state, make_round_fn, train_loop
+from repro.fed import (
+    ServeEngine,
+    consensus_params,
+    init_fl_state,
+    make_round_fn,
+    make_router,
+    train_loop,
+)
 from repro.models import transformer as TF
 from repro.optim import adamw
 
@@ -49,13 +68,28 @@ state, hist = train_loop(
     state, make_round_fn(loss_fn, opt, graph), batches(), n_rounds=ROUNDS, eval_every=5, progress=True
 )
 
-print("\nforming consensus model (DecAvg average of the node ensemble)...")
-params = consensus_params(state.params)
-
 prompts = jnp.asarray(
     [make_token_stream(16, cfg.vocab_size, seed=100 + i)[:8] for i in range(4)], jnp.int32
 )
-print(f"serving a batch of {prompts.shape[0]} requests (greedy, KV cache)...")
-out = generate(params, cfg, prompts, n_new=16, cache_len=128)
+engine = ServeEngine(cfg, cache_len=128)
+
+print("\n[1] consensus serving (DecAvg average of the node ensemble)...")
+params = consensus_params(state.params)
+out = engine.generate(params, prompts, n_new=16)
 for i in range(prompts.shape[0]):
     print(f"  req{i}: prompt={prompts[i].tolist()} -> {out[i].tolist()}")
+
+print("\n[2] ensemble serving (router assigns each query a node)...")
+router = make_router(graph, "consensus")
+homes = jnp.arange(prompts.shape[0], dtype=jnp.int32) % N_NODES
+clocks = jnp.zeros(N_NODES)  # post-training: every node equally fresh
+assignments = jnp.stack(
+    [
+        router.route(homes[i], clocks, jnp.zeros(N_NODES), jax.random.PRNGKey(i))
+        for i in range(prompts.shape[0])
+    ]
+)
+out_nodes = engine.serve(state.params, assignments, prompts, n_new=16)
+for i in range(prompts.shape[0]):
+    agree = "==" if bool(jnp.all(out_nodes[i] == out[i])) else "!="
+    print(f"  req{i}: node {int(assignments[i])} {agree} consensus -> {out_nodes[i].tolist()}")

@@ -12,5 +12,15 @@ from .executor import (
     stack_states,
     unstack_states,
 )
-from .serve import consensus_params, decode_one, generate, prefill
+from .router import QueryStream, Router, hop_matrix, make_router, poisson_query_stream
+from .serve import (
+    ServeEngine,
+    consensus_params,
+    decode_one,
+    generate,
+    generate_tokenwise,
+    prefill,
+    run_serve_trajectory,
+    serve_summary,
+)
 from .trainer import DFLState, init_fl_state, make_eval_fn, make_round_fn, sigma_metrics, train_loop

@@ -654,6 +654,91 @@ def run_sharded_trajectory(
     return final, hist
 
 
+def _make_event_step(
+    loss_fn,
+    optimizer,
+    plan: CommPlan,
+    sched_d: jax.Array,
+    n_sched_rounds: int,
+    xs_d: jax.Array,
+    ys_d: jax.Array,
+    *,
+    reinit_opt: bool,
+    comp: Compression | None,
+    base_key: jax.Array,
+):
+    """One gossip event (local phase → pairwise mix → opt reinit → clocks)
+    as a reusable traced step, shared by ``run_event_trajectory`` and the
+    serving executor (``fed.serve.run_serve_trajectory``) so interleaving
+    queries cannot change the training math.
+
+    Returns ``step(params, opt_state, counts, clocks, mirror, i, e, t) ->
+    (params, opt_state, counts, clocks, mirror, (liv, loss_mean, stale,
+    delivered))``.  ``i`` is the event's ordinal in the *gossip* stream (the
+    failure-key fold index), not its position in whatever envelope the
+    caller scans — so the failure draws are invariant to interleaved
+    non-gossip events.  ``mirror`` is the compression residual tree (pass
+    ``None`` when ``comp`` is ``None``).
+    """
+    ep = plan.event_uv
+    failures_active = plan.failures.active
+    n_nodes = xs_d.shape[0]
+
+    def step(params, opt_state, counts, clocks, mirror, i, e, t):
+        liv = e >= 0
+        uv = ep[jnp.maximum(e, 0)]  # (2,) endpoints (padding reads edge 0, masked below)
+
+        # 1. local phase: both endpoints catch up by b_local minibatch steps
+        cur = counts[uv] % n_sched_rounds
+        idx = sched_d[cur, uv]  # (2, b, bs)
+        batch = (xs_d[uv[:, None, None], idx], ys_d[uv[:, None, None], idx])
+        pair_p = jax.tree_util.tree_map(lambda l: l[uv], params)
+        pair_o = jax.tree_util.tree_map(lambda l: l[uv], opt_state)
+        new_p, new_o, loss_pair = jax.vmap(partial(_local_steps, loss_fn, optimizer))(
+            pair_p, pair_o, batch
+        )
+        new_p = jax.tree_util.tree_map(lambda a, old: jnp.where(liv, a, old), new_p, pair_p)
+        new_o = jax.tree_util.tree_map(lambda a, old: jnp.where(liv, a, old), new_o, pair_o)
+        params = jax.tree_util.tree_map(lambda l, nl: l.at[uv].set(nl), params, new_p)
+        opt_state = jax.tree_util.tree_map(lambda l, nl: l.at[uv].set(nl), opt_state, new_o)
+
+        # 2. pairwise exchange (failure draws keyed per event).  event_keep
+        # here consumes the same key event_mix folds internally, so the
+        # executor's bookkeeping sees exactly the draw that masked the
+        # exchange: a failed exchange moves no model (and counts no
+        # messages below), but the endpoints did wake and train.
+        k = jax.random.fold_in(base_key, i) if failures_active else None
+        delivered = (liv & plan.event_keep(k)) if failures_active else liv
+        if comp is not None:
+            upd = jnp.zeros(n_nodes, bool).at[uv].set(delivered)
+            params, mirror = compressed_mix_with(
+                lambda q: plan.event_mix(q, e, k), params, mirror, comp,
+                update_mask=upd,
+            )
+        else:
+            params = plan.event_mix(params, e, k)
+
+        # 3. pairwise optimizer-state reinit (Algorithm 1 line 15)
+        if reinit_opt:
+            pair_after = jax.tree_util.tree_map(lambda l: l[uv], params)
+            fresh = jax.vmap(optimizer.init)(pair_after)
+            kept = jax.tree_util.tree_map(lambda l: l[uv], opt_state)
+            fresh = jax.tree_util.tree_map(
+                lambda a, old: jnp.where(liv, a, old), fresh, kept
+            )
+            opt_state = jax.tree_util.tree_map(
+                lambda l, nl: l.at[uv].set(nl), opt_state, fresh
+            )
+
+        # 4. virtual clocks (staleness measured before the clocks move)
+        stale = (t - clocks[uv]).mean()
+        clocks = clocks.at[uv].set(jnp.where(liv, t, clocks[uv]))
+        counts = counts.at[uv].add(jnp.where(liv, 1, 0))
+        return params, opt_state, counts, clocks, mirror, (liv, loss_pair.mean(), stale, delivered)
+
+    return step
+
+
 def run_event_trajectory(
     state: DFLState,
     loss_fn,
@@ -752,10 +837,12 @@ def run_event_trajectory(
             if len(hits):
                 do_eval_np[hits[-1]] = True
 
-    ep = plan.event_uv
-    failures_active = plan.failures.active
     comp = compression if (compression is not None and compression.active) else None
     rng, base_key = jax.random.split(state.rng)
+    event_step = _make_event_step(
+        loss_fn, optimizer, plan, sched_d, n_sched_rounds, xs_d, ys_d,
+        reinit_opt=reinit_opt, comp=comp, base_key=base_key,
+    )
 
     # per-bin accumulators riding the scan carry (repro.obs.BinSpec): sums /
     # counts per wall-time bin, the set-style eval slot, and a fixed-width
@@ -779,58 +866,14 @@ def run_event_trajectory(
         else:
             (params, opt_state, counts, clocks, acc), mirror = carry, None
         i, e, t, b, do_ev = inp
-        liv = e >= 0
-        livf = liv.astype(jnp.float32)
-        uv = ep[jnp.maximum(e, 0)]  # (2,) endpoints (padding reads edge 0, masked below)
-
-        # 1. local phase: both endpoints catch up by b_local minibatch steps
-        cur = counts[uv] % n_sched_rounds
-        idx = sched_d[cur, uv]  # (2, b, bs)
-        batch = (xs_d[uv[:, None, None], idx], ys_d[uv[:, None, None], idx])
-        pair_p = jax.tree_util.tree_map(lambda l: l[uv], params)
-        pair_o = jax.tree_util.tree_map(lambda l: l[uv], opt_state)
-        new_p, new_o, loss_pair = jax.vmap(partial(_local_steps, loss_fn, optimizer))(
-            pair_p, pair_o, batch
+        params, opt_state, counts, clocks, mirror, (liv, loss_mean, stale, delivered) = (
+            event_step(params, opt_state, counts, clocks, mirror, i, e, t)
         )
-        new_p = jax.tree_util.tree_map(lambda a, old: jnp.where(liv, a, old), new_p, pair_p)
-        new_o = jax.tree_util.tree_map(lambda a, old: jnp.where(liv, a, old), new_o, pair_o)
-        params = jax.tree_util.tree_map(lambda l, nl: l.at[uv].set(nl), params, new_p)
-        opt_state = jax.tree_util.tree_map(lambda l, nl: l.at[uv].set(nl), opt_state, new_o)
+        livf = liv.astype(jnp.float32)
 
-        # 2. pairwise exchange (failure draws keyed per event).  event_keep
-        # here consumes the same key event_mix folds internally, so the
-        # executor's bookkeeping sees exactly the draw that masked the
-        # exchange: a failed exchange moves no model (and counts no
-        # messages below), but the endpoints did wake and train.
-        k = jax.random.fold_in(base_key, i) if failures_active else None
-        delivered = (liv & plan.event_keep(k)) if failures_active else liv
-        if comp is not None:
-            upd = jnp.zeros(n_nodes, bool).at[uv].set(delivered)
-            params, mirror = compressed_mix_with(
-                lambda q: plan.event_mix(q, e, k), params, mirror, comp,
-                update_mask=upd,
-            )
-        else:
-            params = plan.event_mix(params, e, k)
-
-        # 3. pairwise optimizer-state reinit (Algorithm 1 line 15)
-        if reinit_opt:
-            pair_after = jax.tree_util.tree_map(lambda l: l[uv], params)
-            fresh = jax.vmap(optimizer.init)(pair_after)
-            kept = jax.tree_util.tree_map(lambda l: l[uv], opt_state)
-            fresh = jax.tree_util.tree_map(
-                lambda a, old: jnp.where(liv, a, old), fresh, kept
-            )
-            opt_state = jax.tree_util.tree_map(
-                lambda l, nl: l.at[uv].set(nl), opt_state, fresh
-            )
-
-        # 4. virtual clocks, staleness, per-bin metric accumulation
-        stale = (t - clocks[uv]).mean()
-        clocks = clocks.at[uv].set(jnp.where(liv, t, clocks[uv]))
-        counts = counts.at[uv].add(jnp.where(liv, 1, 0))
+        # per-bin metric accumulation
         acc = dict(acc)
-        acc["loss_sum"] = acc["loss_sum"].at[b].add(loss_pair.mean() * livf)
+        acc["loss_sum"] = acc["loss_sum"].at[b].add(loss_mean * livf)
         acc["stale_sum"] = acc["stale_sum"].at[b].add(stale * livf)
         acc["cnt"] = acc["cnt"].at[b].add(livf)
         acc["msg_cnt"] = acc["msg_cnt"].at[b].add(2.0 * delivered.astype(jnp.float32))

@@ -1,0 +1,208 @@
+"""Consensus-aware query routing for live DFL serving (DESIGN.md §19).
+
+Decentralised training never produces one converged artifact: each node
+holds its own parameters, equal only up to the consensus noise floor
+(§4.2).  Serving therefore means queries hit *nodes*, and the router
+decides which node's parameters answer each query by trading
+
+* **staleness** — time since the candidate last mixed (its virtual clock,
+  the same per-node quantity the flight recorder's staleness channels bin),
+* **locality** — hop distance from the query's home node to the candidate,
+* **queueing** — how far in the future the candidate's serve slot is under
+  the open-loop latency model.
+
+``QueryStream`` realises an open-loop Poisson arrival process host-side
+into the padded, sorted, static-envelope discipline of
+``core.topology.EventStream``, so gossip and serve events merge into one
+scanned envelope (``fed.serve.run_serve_trajectory``) with no barrier
+between training and inference.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import Graph
+
+PyTree = Any
+
+__all__ = [
+    "QueryStream",
+    "poisson_query_stream",
+    "hop_matrix",
+    "Router",
+    "make_router",
+    "ROUTER_POLICIES",
+]
+
+ROUTER_POLICIES = ("uniform", "local", "consensus")
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryStream:
+    """A realised open-loop query arrival schedule: sorted (time, home) events.
+
+    Mirrors ``EventStream``'s static-envelope discipline so different
+    seeds / rates share one compiled scan:
+
+    ``times``  (Q,) float32 non-decreasing; padding entries hold ``horizon``.
+    ``homes``  (Q,) int32 arrival node per query; padding is -1 (identity).
+    ``qidx``   (Q,) int32 index into the caller's query payload pool.
+    """
+
+    times: np.ndarray
+    homes: np.ndarray
+    qidx: np.ndarray
+    n_queries: int
+    horizon: float
+    qps: float
+
+    def __post_init__(self):
+        if self.times.shape != self.homes.shape or self.times.ndim != 1:
+            raise ValueError(
+                f"times/homes must be matching 1-D arrays, got "
+                f"{self.times.shape} vs {self.homes.shape}"
+            )
+        if self.qidx.shape != self.times.shape:
+            raise ValueError("qidx must match the envelope")
+        if self.n_queries > len(self.times):
+            raise ValueError("n_queries exceeds the padded envelope")
+
+    @property
+    def envelope(self) -> int:
+        return len(self.times)
+
+
+def poisson_query_stream(
+    n_nodes: int,
+    horizon: float,
+    qps: float,
+    seed: int = 0,
+    pool: int = 1,
+    envelope: int | None = None,
+    skew: float = 0.0,
+) -> QueryStream:
+    """Sample a Poisson(qps · horizon) open-loop arrival process.
+
+    Arrival instants are iid Uniform(0, horizon) (equivalent to exponential
+    inter-arrivals), sorted; each query lands on a home node drawn uniformly
+    — or, with ``skew`` > 0, rank-weighted ∝ (rank+1)^-skew so traffic
+    concentrates on low-index nodes (hot-spot scenarios).  ``qidx`` indexes
+    a payload pool of size ``pool``.  Pure function of ``seed``.
+    """
+    if horizon <= 0:
+        raise ValueError(f"horizon must be positive, got {horizon}")
+    if qps < 0:
+        raise ValueError(f"qps must be non-negative, got {qps}")
+    rs = np.random.RandomState(seed)
+    q = int(rs.poisson(qps * horizon)) if qps > 0 else 0
+    times = np.sort(rs.uniform(0.0, horizon, size=q)).astype(np.float32)
+    if skew > 0:
+        w = (np.arange(n_nodes) + 1.0) ** (-float(skew))
+        homes = rs.choice(n_nodes, size=q, p=w / w.sum()).astype(np.int32)
+    else:
+        homes = rs.randint(0, n_nodes, size=q).astype(np.int32)
+    qidx = rs.randint(0, max(pool, 1), size=q).astype(np.int32)
+    env = q if envelope is None else int(envelope)
+    if env < q:
+        raise ValueError(f"envelope {env} cannot hold {q} realised queries")
+    pad = env - q
+    if pad:
+        times = np.concatenate([times, np.full(pad, horizon, np.float32)])
+        homes = np.concatenate([homes, np.full(pad, -1, np.int32)])
+        qidx = np.concatenate([qidx, np.zeros(pad, np.int32)])
+    return QueryStream(
+        times=times,
+        homes=homes,
+        qidx=qidx,
+        n_queries=q,
+        horizon=float(horizon),
+        qps=float(qps),
+    )
+
+
+def hop_matrix(graph: Graph) -> np.ndarray:
+    """All-pairs hop distances (n, n) int32 via BFS frontier expansion.
+
+    Unreachable pairs get ``n`` (an impossible distance — strictly worse
+    than any real path, so routers naturally avoid them).
+    """
+    a = graph.adjacency > 0
+    if graph.directed:
+        a = a | a.T
+    n = graph.n
+    hops = np.full((n, n), n, np.int32)
+    np.fill_diagonal(hops, 0)
+    reach = np.eye(n, dtype=bool)
+    for d in range(1, n):
+        nxt = (reach @ a) & ~reach
+        if not nxt.any():
+            break
+        hops[nxt] = d
+        reach |= nxt
+    return hops
+
+
+@dataclasses.dataclass(frozen=True)
+class Router:
+    """Routing policy over a fixed topology; ``route`` is traced in-scan.
+
+    ``policy``: "uniform" (any node, key-driven), "local" (always the home
+    node), or "consensus" (argmin of a freshness/locality/queue score with
+    a hard staleness budget — candidates over budget are masked out unless
+    *every* node is over budget, in which case the unmasked score decides).
+    """
+
+    policy: str
+    hops: jax.Array  # (n, n) float32 hop distances
+    staleness_budget: float = float("inf")
+    locality_weight: float = 0.1
+    queue_weight: float = 1.0
+
+    @property
+    def n(self) -> int:
+        return self.hops.shape[0]
+
+    def route(
+        self, home: jax.Array, staleness: jax.Array, wait: jax.Array, key: jax.Array
+    ) -> jax.Array:
+        """Pick the serving node for one query.
+
+        home (), staleness (n,) = t - clocks, wait (n,) = max(busy - t, 0);
+        returns a scalar int32 node id.  Pure and deterministic in (inputs,
+        key), so a fixed seed replays the exact routing sequence.
+        """
+        if self.policy == "local":
+            return home.astype(jnp.int32)
+        if self.policy == "uniform":
+            return jax.random.randint(key, (), 0, self.n, dtype=jnp.int32)
+        if self.policy != "consensus":
+            raise ValueError(f"unknown router policy {self.policy!r}")
+        score = self.locality_weight * self.hops[home] + staleness + self.queue_weight * wait
+        ok = staleness <= self.staleness_budget
+        masked = jnp.where(ok, score, jnp.inf)
+        return jnp.where(jnp.any(ok), jnp.argmin(masked), jnp.argmin(score)).astype(jnp.int32)
+
+
+def make_router(
+    graph: Graph,
+    policy: str = "consensus",
+    *,
+    staleness_budget: float = float("inf"),
+    locality_weight: float = 0.1,
+    queue_weight: float = 1.0,
+) -> Router:
+    """Build a ``Router`` for ``graph`` (hop table computed host-side once)."""
+    if policy not in ROUTER_POLICIES:
+        raise ValueError(f"policy must be one of {ROUTER_POLICIES}, got {policy!r}")
+    return Router(
+        policy=policy,
+        hops=jnp.asarray(hop_matrix(graph), jnp.float32),
+        staleness_budget=float(staleness_budget),
+        locality_weight=float(locality_weight),
+        queue_weight=float(queue_weight),
+    )

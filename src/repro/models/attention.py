@@ -22,7 +22,13 @@ from .common import KeyGen, apply_rope, dense_init
 
 PyTree = Any
 
-__all__ = ["init_attention", "attention_forward", "attention_decode", "init_kv_cache"]
+__all__ = [
+    "init_attention",
+    "attention_forward",
+    "attention_decode",
+    "attention_prefill",
+    "init_kv_cache",
+]
 
 
 def init_attention(init_cfg: InitConfig, key: jax.Array, cfg: ArchConfig) -> PyTree:
@@ -180,6 +186,44 @@ def init_kv_cache(cfg: ArchConfig, batch_shape: tuple[int, ...], cache_len: int,
     dt = dtype or cfg.param_dtype
     shape = batch_shape + (cache_len, kvh, hd)
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def attention_prefill(
+    p: PyTree,
+    cfg: ArchConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: PyTree,
+    window: int = 0,
+) -> tuple[jax.Array, PyTree]:
+    """Full-prompt prefill with one batched KV-cache insert.
+
+    x (..., S, D); positions (S,) absolute; cache k/v (..., T, KVH, hd).
+    Attention is the plain causal (optionally windowed) pass; the last
+    ``min(S, T)`` keys/values are then written at ``positions % T`` — the
+    exact slots token-by-token ``attention_decode`` writes would have left
+    (consecutive positions mod T are unique slots), so a decode resuming at
+    ``pos = S`` sees an identical ring buffer.
+    """
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    s = x.shape[-2]
+    t = cache["k"].shape[-3]
+    q = _project(p["wq"], x, h, hd)
+    k = _project(p["wk"], x, kvh, hd)
+    v = _project(p["wv"], x, kvh, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    mask = _causal_mask(s, window)
+    out = _sdpa(q, k, v, mask, 1.0 / (hd**0.5))
+
+    w = min(s, t)
+    slots = (positions[s - w :] % t).astype(jnp.int32)
+    kc = cache["k"].at[..., slots, :, :].set(k[..., s - w :, :, :].astype(cache["k"].dtype))
+    vc = cache["v"].at[..., slots, :, :].set(v[..., s - w :, :, :].astype(cache["v"].dtype))
+
+    out = out.reshape(out.shape[:-2] + (h * hd,))
+    y = jnp.einsum("...sf,fd->...sd", out, p["wo"]["w"])
+    return y, {"k": kc, "v": vc}
 
 
 def attention_decode(

@@ -27,7 +27,7 @@ from .common import KeyGen, dense_init
 
 PyTree = Any
 
-__all__ = ["init_mamba", "mamba_forward", "mamba_decode", "init_mamba_cache"]
+__all__ = ["init_mamba", "mamba_forward", "mamba_prefill", "mamba_decode", "init_mamba_cache"]
 
 _CHUNK = 256
 
@@ -137,6 +137,33 @@ def mamba_forward(p: PyTree, cfg: ArchConfig, x: jax.Array) -> jax.Array:
     y = y + xc.reshape(lead + (n_chunks * chunk, di))[..., :l, :].astype(jnp.float32) * p["d_skip"]
     y = y.astype(x.dtype) * jax.nn.silu(z)
     return jnp.einsum("...li,id->...ld", y, p["out_proj"]["w"])
+
+
+def mamba_prefill(p: PyTree, cfg: ArchConfig, x: jax.Array) -> tuple[jax.Array, PyTree]:
+    """Full-prompt pass that also returns the decode cache. x (..., S, D).
+
+    Single-chunk associative scan — no chunk padding, so the final SSM state
+    is the exact h the recurrence reaches at the last prompt token, and the
+    conv carry is the tail ``_conv1d`` leaves behind: the cache
+    token-by-token ``mamba_decode`` would have produced, in one pass.
+    """
+    xz = jnp.einsum("...ld,de->...le", x, p["in_proj"]["w"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_carry = _conv1d(p, xin)
+    decay, bx, c = _ssm_params(p, cfg, xc)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h_all = jax.lax.associative_scan(assoc, (decay, bx), axis=-3)  # h0 = 0
+    y = jnp.einsum("...lin,...ln->...li", h_all, c)
+    h_last = h_all[..., -1, :, :]
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("...li,id->...ld", y, p["out_proj"]["w"])
+    return out, {"conv": conv_carry.astype(cfg.param_dtype), "ssm": h_last}
 
 
 def init_mamba_cache(cfg: ArchConfig, batch_shape: tuple[int, ...], dtype=None) -> PyTree:

@@ -24,9 +24,15 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ffn_kinds, layer_kinds
 from repro.core.initialisation import InitConfig
-from .attention import attention_decode, attention_forward, init_attention, init_kv_cache
+from .attention import (
+    attention_decode,
+    attention_forward,
+    attention_prefill,
+    init_attention,
+    init_kv_cache,
+)
 from .common import KeyGen, dense_init, norm_apply, norm_init
-from .mamba import init_mamba, init_mamba_cache, mamba_decode, mamba_forward
+from .mamba import init_mamba, init_mamba_cache, mamba_decode, mamba_forward, mamba_prefill
 from .mlp import ffn_forward, init_ffn
 from .moe import init_moe, moe_forward
 from .rwkv import (
@@ -39,7 +45,16 @@ from .rwkv import (
 
 PyTree = Any
 
-__all__ = ["unit_size", "init_params", "forward", "init_cache", "decode_step", "lm_loss", "hidden_to_logits"]
+__all__ = [
+    "unit_size",
+    "init_params",
+    "forward",
+    "init_cache",
+    "decode_step",
+    "prefill_cache",
+    "lm_loss",
+    "hidden_to_logits",
+]
 
 
 # ----------------------------------------------------------------- structure
@@ -296,6 +311,106 @@ def _block_decode(p: PyTree, cfg: ArchConfig, kind: str, fk: str, x: jax.Array, 
     elif fk == "dense":
         x = x + ffn_forward(p["ffn"], cfg, h2)
     return x, cache
+
+
+def _block_prefill(
+    p: PyTree,
+    cfg: ArchConfig,
+    kind: str,
+    fk: str,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: PyTree,
+):
+    """Residual block over the full prompt that also fills the decode cache."""
+    h = norm_apply(p["norm1"], x, cfg.norm)
+    if kind in ("attn", "swa"):
+        window = cfg.sliding_window if kind == "swa" else 0
+        y, cache = attention_prefill(p["attn"], cfg, h, positions, cache, window)
+        x = x + y
+    elif kind == "mamba":
+        y, cache = mamba_prefill(p["mamba"], cfg, h)
+        x = x + y
+    elif kind == "rwkv":
+        # the full-sequence mixers already return exactly the decode cache:
+        # the final wkv state and the last-token shift inputs
+        nh = cfg.d_model // cfg.rwkv_head_dim
+        state0 = jnp.zeros(x.shape[:-2] + (nh, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32)
+        prev0 = jnp.zeros(x.shape[:-2] + (1, x.shape[-1]), x.dtype)
+        y_t, tshift, state = rwkv_time_mix(p["rwkv"]["tmix"], cfg, h, prev0, state0)
+        x = x + y_t
+        h2 = norm_apply(p["norm2"], x, cfg.norm)
+        y_c, cshift = rwkv_channel_mix(p["rwkv"]["cmix"], h2, prev0)
+        x = x + y_c
+        cache = {
+            "tshift": tshift.astype(cache["tshift"].dtype),
+            "cshift": cshift.astype(cache["cshift"].dtype),
+            "state": state,
+        }
+        return x, cache
+    h2 = norm_apply(p["norm2"], x, cfg.norm)
+    if fk == "moe":
+        y, _ = moe_forward(p["ffn"], cfg, h2)
+        x = x + y
+    elif fk == "dense":
+        x = x + ffn_forward(p["ffn"], cfg, h2)
+    return x, cache
+
+
+def prefill_cache(
+    params: PyTree,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    cache_len: int,
+    frontend_embeds: jax.Array | None = None,
+) -> tuple[jax.Array, PyTree]:
+    """Batched prefill: one full-sequence pass that fills the decode cache.
+
+    tokens (..., S) int32.  Returns (last-position logits (..., V), cache
+    ready for ``decode_step`` at ``pos = S``).  Mirrors ``decode_step``'s
+    stack-scan / unrolled split so the cache trees line up leaf for leaf.
+    """
+    kinds = layer_kinds(cfg)
+    fkinds = ffn_kinds(cfg)
+    u, n_full, tail = _split_layers(cfg)
+    cache = init_cache(cfg, tokens.shape[:-1], cache_len)
+    x = _embed(params, cfg, tokens, frontend_embeds)
+    positions = jnp.arange(x.shape[-2])
+
+    def unit_fn(x, scanned):
+        unit_params, unit_cache = scanned
+        new_caches = []
+        for j in range(u):
+            x, c = _block_prefill(
+                unit_params[j], cfg, kinds[j], fkinds[j], x, positions, unit_cache[j]
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if n_full > 2:
+        x, new_stack = jax.lax.scan(unit_fn, x, (tuple(params["stack"]), tuple(cache["stack"])))
+        new_stack = list(new_stack)
+    else:
+        per_caches = []
+        for per in range(n_full):
+            ps = _index_stack(params["stack"], per)
+            cs = _index_stack(cache["stack"], per)
+            x, ncs = unit_fn(x, (ps, cs))
+            per_caches.append(ncs)
+        new_stack = [
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *[pc[j] for pc in per_caches])
+            for j in range(u)
+        ]
+
+    new_tail = []
+    for j, bp in enumerate(params["tail"]):
+        x, c = _block_prefill(
+            bp, cfg, kinds[n_full * u + j], fkinds[n_full * u + j], x, positions, cache["tail"][j]
+        )
+        new_tail.append(c)
+    x = norm_apply(params["final_norm"], x, cfg.norm)
+    logits = hidden_to_logits(params, cfg, x[..., -1:, :])
+    return logits[..., 0, :], {"stack": new_stack, "tail": new_tail}
 
 
 def decode_step(

@@ -1,0 +1,312 @@
+"""Live serving (DESIGN.md §19): batched prefill parity, router policies,
+and the interleaved train+serve executor.
+
+The load-bearing properties: (1) the one-prefill ``generate`` path emits
+exactly the tokens of the old token-by-token reference loop; (2) the router
+is a pure function of (inputs, key) so fixed seeds replay routing verbatim;
+(3) staleness/latency bookkeeping matches a hand-computed event stream; and
+(4) interleaving serve events into the gossip scan leaves the training
+trajectory **bitwise** untouched — at qps = 0 the serve executor IS the
+event executor, and under load the training params must not move.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import topology as T
+from repro.core.commplan import compile_plan
+from repro.core.initialisation import InitConfig, gain_from_graph
+from repro.data import batch_index_schedule, mnist_like, node_datasets
+from repro.fed import init_fl_state, make_eval_fn, run_event_trajectory
+from repro.fed.router import QueryStream, hop_matrix, make_router, poisson_query_stream
+from repro.fed.serve import generate, generate_tokenwise, run_serve_trajectory, serve_summary
+from repro.models import transformer as TF
+from repro.models.paper_models import classifier_loss, init_mlp, mlp_forward
+from repro.optim import sgd
+
+MICRO = ArchConfig(
+    name="micro",
+    family="paper",
+    source="test",
+    n_layers=2,
+    d_model=32,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=64,
+    vocab_size=97,
+    tie_embeddings=True,
+    dtype="float32",
+    rwkv_head_dim=16,
+)
+
+
+def _mlp_dfl(n=6, per_node=32, horizon=8.0, seed=0, test_size=64):
+    graph = T.ring(n)
+    ds = mnist_like(n * per_node + test_size, seed=seed)
+    parts = [np.arange(i * per_node, (i + 1) * per_node) for i in range(n)]
+    xs, ys = node_datasets(ds, parts)
+    test = (ds.x[-test_size:], ds.y[-test_size:])
+    loss_fn = lambda p, b: classifier_loss(mlp_forward(p, b[0]), b[1])
+    opt = sgd(1e-3, 0.5)
+    init_one = lambda k: init_mlp(InitConfig("he_normal", gain_from_graph(graph)), k, hidden=(16,))
+    state = init_fl_state(jax.random.PRNGKey(seed), n, init_one, opt)
+    plan = compile_plan(graph)
+    stream = T.poisson_event_stream(graph, horizon=horizon, rate=1.0, seed=seed + 1)
+    sched = batch_index_schedule(per_node, n, 8, int(horizon) * 2, seed=seed)
+    return graph, state, plan, stream, sched, xs, ys, test, loss_fn, opt
+
+
+def _tree_equal(a, b) -> bool:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(np.array_equal(x, y) for x, y in zip(la, lb))
+
+
+# ------------------------------------------------------------- generate parity
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_generate_prefill_matches_tokenwise(temperature):
+    """One batched prefill + scanned decode must emit exactly the tokens of
+    the old token-by-token loop (same key-split chain, greedy and sampled)."""
+    params = TF.init_params(jax.random.PRNGKey(1), MICRO, InitConfig(gain=2.0))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 5), 0, MICRO.vocab_size)
+    rng = jax.random.PRNGKey(7)
+    fast = generate(params, MICRO, prompt, 6, 16, temperature=temperature, rng=rng)
+    slow = generate_tokenwise(params, MICRO, prompt, 6, 16, temperature=temperature, rng=rng)
+    assert fast.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(fast), np.asarray(slow))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("pattern", [("swa",), ("mamba",), ("rwkv",), ("attn", "mamba")])
+def test_generate_parity_across_block_kinds(pattern):
+    cfg = dataclasses.replace(MICRO, block_pattern=pattern, sliding_window=4)
+    params = TF.init_params(jax.random.PRNGKey(1), cfg, InitConfig(gain=2.0))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 6), 0, cfg.vocab_size)
+    fast = generate(params, cfg, prompt, 5, 16, rng=jax.random.PRNGKey(3))
+    slow = generate_tokenwise(params, cfg, prompt, 5, 16, rng=jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(fast), np.asarray(slow))
+
+
+# ------------------------------------------------------------------ the router
+def test_hop_matrix_ring_and_complete():
+    n = 8
+    hops = hop_matrix(T.ring(n))
+    for i in range(n):
+        for j in range(n):
+            assert hops[i, j] == min(abs(i - j), n - abs(i - j))
+    hk = hop_matrix(T.complete(5))
+    assert np.array_equal(hk, np.ones((5, 5), np.int32) - np.eye(5, dtype=np.int32))
+
+
+def test_hop_matrix_disconnected_pairs_are_penalised():
+    # two disjoint edges: 0-1 and 2-3; cross-component distance must be n
+    adj = np.zeros((4, 4), np.float32)
+    adj[0, 1] = adj[1, 0] = adj[2, 3] = adj[3, 2] = 1.0
+    hops = hop_matrix(T.Graph(adj, name="pairs"))
+    assert hops[0, 1] == 1 and hops[2, 3] == 1
+    assert hops[0, 2] == 4 and hops[1, 3] == 4
+
+
+def test_query_stream_deterministic_padded_and_skewed():
+    a = poisson_query_stream(8, 20.0, 3.0, seed=5)
+    b = poisson_query_stream(8, 20.0, 3.0, seed=5)
+    assert a.n_queries == b.n_queries
+    assert np.array_equal(a.times, b.times) and np.array_equal(a.homes, b.homes)
+    assert np.all(np.diff(a.times[: a.n_queries]) >= 0)
+    padded = poisson_query_stream(8, 20.0, 3.0, seed=5, envelope=a.n_queries + 10)
+    assert padded.envelope == a.n_queries + 10
+    assert np.all(padded.homes[padded.n_queries :] == -1)
+    assert np.all(padded.times[padded.n_queries :] == 20.0)
+    hot = poisson_query_stream(64, 50.0, 20.0, seed=5, skew=2.0)
+    cold = poisson_query_stream(64, 50.0, 20.0, seed=5, skew=0.0)
+    assert hot.homes[: hot.n_queries].mean() < cold.homes[: cold.n_queries].mean()
+    with pytest.raises(ValueError, match="envelope"):
+        poisson_query_stream(8, 20.0, 3.0, seed=5, envelope=1)
+
+
+def test_router_policies_route_sensibly():
+    graph = T.ring(6)
+    n = graph.n
+    stale = jnp.asarray([5.0, 0.1, 5.0, 5.0, 5.0, 5.0])
+    wait = jnp.zeros(n)
+    key = jax.random.PRNGKey(0)
+    local = make_router(graph, "local")
+    assert int(local.route(jnp.int32(3), stale, wait, key)) == 3
+    # consensus with negligible locality weight tracks freshness
+    cons = make_router(graph, "consensus", locality_weight=1e-4)
+    assert int(cons.route(jnp.int32(3), stale, wait, key)) == 1
+    # a binding staleness budget masks the fresh-but-remote node out only
+    # when a within-budget candidate exists; all-over-budget falls back
+    tight = make_router(graph, "consensus", staleness_budget=1.0, locality_weight=1e-4)
+    assert int(tight.route(jnp.int32(3), stale, wait, key)) == 1
+    none_ok = make_router(graph, "consensus", staleness_budget=0.01, locality_weight=1e-4)
+    assert int(none_ok.route(jnp.int32(3), stale, wait, key)) == 1
+    uni = make_router(graph, "uniform")
+    picks = {int(uni.route(jnp.int32(0), stale, wait, jax.random.PRNGKey(s))) for s in range(32)}
+    assert len(picks) > 1 and all(0 <= p < n for p in picks)
+
+
+# ------------------------------------------- hand-built staleness bookkeeping
+def test_triangle_staleness_and_latency_bookkeeping():
+    """K3 with two gossip events and three queries, local routing: every
+    query lands 0.5 after its home node's last mix, unqueued, zero hops."""
+    _, state, _, _, sched, xs, ys, test, loss_fn, opt = _mlp_dfl(n=3, horizon=3.0)
+    graph = T.complete(3)
+    plan = compile_plan(graph)
+    # edge ids (row-major, i<j): 0 = (0,1), 1 = (0,2), 2 = (1,2)
+    stream = T.EventStream(
+        times=np.array([1.0, 2.0], np.float32),
+        edges=np.array([0, 2], np.int32),
+        n_events=2,
+        horizon=3.0,
+        rates=np.ones(3),
+    )
+    queries = QueryStream(
+        times=np.array([0.5, 1.5, 2.5], np.float32),
+        homes=np.array([1, 0, 2], np.int32),
+        qidx=np.zeros(3, np.int32),
+        n_queries=3,
+        horizon=3.0,
+        qps=1.0,
+    )
+    _, _, serve, _ = run_serve_trajectory(
+        state,
+        loss_fn,
+        opt,
+        plan,
+        stream,
+        queries,
+        make_router(graph, "local"),
+        xs,
+        ys,
+        sched,
+        b_local=2,
+        n_bins=3,
+        service_time=0.05,
+        hop_latency=0.02,
+    )
+    # t=0.5 home 1: clock still 0 → stale 0.5; t=1.5 home 0: edge (0,1)
+    # fired at 1.0 → 0.5; t=2.5 home 2: edge (1,2) fired at 2.0 → 0.5
+    np.testing.assert_array_equal(serve["node"], [1, 0, 2])
+    np.testing.assert_allclose(serve["staleness"], [0.5, 0.5, 0.5], atol=1e-6)
+    np.testing.assert_allclose(serve["latency"], [0.05, 0.05, 0.05], atol=1e-6)
+    np.testing.assert_allclose(serve["hops"], [0.0, 0.0, 0.0], atol=1e-6)
+    summ = serve_summary(serve)
+    assert summ["served"] == 3 and abs(summ["p50_latency"] - 0.05) < 1e-6
+
+
+def test_queueing_serialises_back_to_back_queries():
+    """Two queries hitting one node within its service window: the second
+    waits for the first's slot, so its latency carries the queue delay."""
+    _, state, _, _, sched, xs, ys, test, loss_fn, opt = _mlp_dfl(n=3, horizon=3.0)
+    graph = T.complete(3)
+    stream = T.EventStream(
+        times=np.array([2.9], np.float32),
+        edges=np.array([0], np.int32),
+        n_events=1,
+        horizon=3.0,
+        rates=np.ones(3),
+    )
+    queries = QueryStream(
+        times=np.array([1.0, 1.1], np.float32),
+        homes=np.array([0, 0], np.int32),
+        qidx=np.zeros(2, np.int32),
+        n_queries=2,
+        horizon=3.0,
+        qps=1.0,
+    )
+    _, _, serve, _ = run_serve_trajectory(
+        state,
+        loss_fn,
+        opt,
+        compile_plan(graph),
+        stream,
+        queries,
+        make_router(graph, "local"),
+        xs,
+        ys,
+        sched,
+        b_local=2,
+        n_bins=3,
+        service_time=0.5,
+        hop_latency=0.0,
+    )
+    # first: starts at 1.0, done 1.5 → latency 0.5; second arrives 1.1,
+    # waits until 1.5, done 2.0 → latency 0.9
+    np.testing.assert_allclose(serve["latency"], [0.5, 0.9], atol=1e-6)
+
+
+# ------------------------------------------------- determinism and bit-parity
+def test_routing_deterministic_under_fixed_seed():
+    graph, state, plan, stream, sched, xs, ys, test, loss_fn, opt = _mlp_dfl()
+    queries = poisson_query_stream(graph.n, stream.horizon, 4.0, seed=3)
+    router = make_router(graph, "consensus")
+    outs = [
+        run_serve_trajectory(
+            state,
+            loss_fn,
+            opt,
+            plan,
+            stream,
+            queries,
+            router,
+            xs,
+            ys,
+            sched,
+            b_local=2,
+            n_bins=4,
+        )
+        for _ in range(2)
+    ]
+    (_, _, s1, _), (_, _, s2, _) = outs
+    for k in ("node", "latency", "staleness", "hops"):
+        np.testing.assert_array_equal(s1[k], s2[k])
+
+
+def test_qps_zero_is_bitwise_the_event_executor():
+    """With no queries the merged envelope is the gossip envelope under an
+    identity permutation: params AND history must match run_event_trajectory
+    bit for bit."""
+    graph, state, plan, stream, sched, xs, ys, test, loss_fn, opt = _mlp_dfl()
+    eval_fn = make_eval_fn(loss_fn)
+    kw = dict(b_local=2, n_bins=4, eval_fn=eval_fn, eval_batch=test)
+    ref_state, ref_hist, _ = run_event_trajectory(
+        state, loss_fn, opt, plan, stream, xs, ys, sched, **kw
+    )
+    queries = poisson_query_stream(graph.n, stream.horizon, 0.0, seed=3)
+    router = make_router(graph, "consensus")
+    srv_state, srv_hist, serve, _ = run_serve_trajectory(
+        state, loss_fn, opt, plan, stream, queries, router, xs, ys, sched, **kw
+    )
+    assert serve_summary(serve)["served"] == 0
+    assert _tree_equal(ref_state.params, srv_state.params)
+    for k in ("train_loss", "test_loss", "staleness", "messages"):
+        np.testing.assert_array_equal(np.asarray(ref_hist[k]), np.asarray(srv_hist[k]))
+
+
+def test_training_params_invariant_under_serve_load():
+    """Serve events read params but never write them, and failure keys fold
+    on the gossip ordinal — so any qps leaves training bitwise unchanged."""
+    graph, state, plan, stream, sched, xs, ys, test, loss_fn, opt = _mlp_dfl()
+    router = make_router(graph, "consensus")
+    q0 = poisson_query_stream(graph.n, stream.horizon, 0.0, seed=3)
+    q5 = poisson_query_stream(graph.n, stream.horizon, 5.0, seed=3)
+    s0, _, srv0, _ = run_serve_trajectory(
+        state, loss_fn, opt, plan, stream, q0, router, xs, ys, sched, b_local=2, n_bins=4
+    )
+    s5, _, srv5, _ = run_serve_trajectory(
+        state, loss_fn, opt, plan, stream, q5, router, xs, ys, sched, b_local=2, n_bins=4
+    )
+    assert serve_summary(srv5)["served"] == q5.n_queries > 0
+    assert _tree_equal(s0.params, s5.params)
+    assert _tree_equal(s0.opt_state, s5.opt_state)
+
+
+def test_serve_summary_empty_is_zeroed():
+    empty = {k: np.zeros(0) for k in ("latency", "staleness", "hops")}
+    summ = serve_summary(empty)
+    assert summ["served"] == 0 and summ["p50_latency"] == 0.0

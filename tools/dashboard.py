@@ -39,6 +39,7 @@ BENCH_ORDER = (
     "BENCH_scaling.json",
     "BENCH_elastic.json",
     "BENCH_compress.json",
+    "BENCH_serve.json",
 )
 
 # per-artifact headline timing field for the summary trend table, tried in
@@ -74,7 +75,8 @@ def _identity_label(rec: dict) -> str:
     parts = [
         f"{k}={v}"
         for k, v in rec.items()
-        if isinstance(v, (str, bool)) or (isinstance(v, int) and k in ("n", "n_nodes", "n_shards", "rounds", "k_plans"))
+        if isinstance(v, (str, bool))
+        or (isinstance(v, int) and k in ("n", "n_nodes", "n_shards", "rounds", "k_plans"))
     ]
     return " ".join(parts) if parts else "-"
 
@@ -143,6 +145,46 @@ def _pareto_lines(doc: dict) -> list[str]:
     return lines
 
 
+def _serve_lines(doc: dict) -> list[str]:
+    """Latency-vs-staleness table from BENCH_serve.json: per (family, n, qps)
+    cell, one row per router policy so the trade each router makes — hops
+    and queueing against the staleness of the answering parameters — reads
+    off a single table."""
+    groups: dict[tuple, list[dict]] = {}
+    for rec in doc.get("records", []):
+        groups.setdefault(
+            (rec.get("family", "?"), rec.get("n", "?"), rec.get("qps", "?")), []
+        ).append(rec)
+    wins = doc.get("consensus_wins", [])
+    lines = [
+        "Per traffic cell, one row per router; latencies and staleness are",
+        "virtual-time (open-loop queueing model over the merged train+serve",
+        "envelope).  Consensus beats uniform on staleness at ≤1.05x p50",
+        "latency on: " + (", ".join(map(str, wins)) if wins else "none") + ".",
+        "",
+    ]
+    for (family, n, qps), recs in groups.items():
+        rows = [
+            [
+                rec.get("router", "?"),
+                _fmt(rec.get("p50_latency", "")),
+                _fmt(rec.get("p95_latency", "")),
+                _fmt(rec.get("mean_staleness_served", "")),
+                _fmt(rec.get("mean_hops", "")),
+                _fmt(rec.get("served", "")),
+                _fmt(rec.get("final_test_loss", "")),
+            ]
+            for rec in sorted(recs, key=lambda r: r.get("router", ""))
+        ]
+        lines += [f"**{family} / n={n} / qps={qps}**", ""]
+        lines += _md_table(
+            ["router", "p50 lat", "p95 lat", "staleness", "hops", "served", "final test loss"],
+            rows,
+        )
+        lines.append("")
+    return lines
+
+
 def bench_sections(root: pathlib.Path) -> list[tuple[str, list[str]]]:
     """(title, markdown lines) per section, from the artifacts under root."""
     docs: dict[str, dict] = {}
@@ -175,8 +217,12 @@ def bench_sections(root: pathlib.Path) -> list[tuple[str, list[str]]]:
 
     if "BENCH_compress.json" in docs:
         sections.append(
-            ("Compressed gossip: bytes-vs-loss Pareto",
-             _pareto_lines(docs["BENCH_compress.json"]))
+            ("Compressed gossip: bytes-vs-loss Pareto", _pareto_lines(docs["BENCH_compress.json"]))
+        )
+
+    if "BENCH_serve.json" in docs:
+        sections.append(
+            ("Serving: latency vs staleness by router", _serve_lines(docs["BENCH_serve.json"]))
         )
 
     for name, doc in docs.items():
